@@ -1,0 +1,76 @@
+"""Paper Fig. 10/11: single-node BFS performance.
+
+Rungs measured (CPU wall clock; absolute GTEPS are NOT comparable to
+Matrix-2000+ — the *relative ladder* is the reproduction target):
+
+  reference-3.0.0 : sequential numpy queue BFS ("just make then run")
+  xla             : edge-parallel relax engine under jit (thread-parallel)
+  avla            : bitmap engine, default kernel tiles (compiler-chosen
+                    vector shape — interpret-mode Pallas on CPU)
+  avls            : bitmap engine, hand-tuned rows_per_tile (the
+                    vector-length-specified mode)
+
+AVLA/AVLS differ exactly like the paper's two SVE modes: tile shape is
+the Pallas analogue of vector length.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, row, timed
+from repro.core import (
+    build_csr, build_heavy_core, degree_reorder, edge_view, generate_edges,
+    hybrid_bfs, traversed_edges,
+)
+from repro.core.reference import reference_bfs
+from repro.core.reorder import relabel_edges
+from repro.kernels.frontier_spmv import core_spmv
+
+
+def run():
+    rows = []
+    scales = (10,) if FAST else (10, 12)
+    for scale in scales:
+        edges = generate_edges(1, scale)
+        g0 = build_csr(edges)
+        r = degree_reorder(g0.degree)
+        g = build_csr(relabel_edges(edges, r))
+        ev = edge_view(g)
+        core = build_heavy_core(g, threshold=8)
+        ro, ci = np.asarray(g.row_offsets), np.asarray(g.col_indices)
+        root = 0
+        res = hybrid_bfs(ev, g.degree, root)
+        m = int(traversed_edges(g.degree, res))
+
+        t0 = time.perf_counter()
+        reference_bfs(ro, ci, root)
+        t_ref = time.perf_counter() - t0
+        rows.append(row(f"bfs_single/scale{scale}/reference-3.0.0",
+                        t_ref * 1e6, f"GTEPS={m / t_ref / 1e9:.5f}"))
+
+        t_xla = timed(lambda: hybrid_bfs(ev, g.degree, root).parent)
+        rows.append(row(f"bfs_single/scale{scale}/xla",
+                        t_xla * 1e6, f"GTEPS={m / t_xla / 1e9:.5f}"))
+
+        for mode, rpt in (("avla", 8), ("avls", 32)):
+            # kernel-tile mode enters through rows_per_tile; run the dense
+            # core level directly to isolate the SVE-analogue effect.
+            from repro.core.heavy import pack_bitmap
+            f_bm = pack_bitmap(jnp.zeros((core.k,), bool).at[0].set(True),
+                               core.k // 32)
+            t_k = timed(lambda: core_spmv(core.a_core, f_bm,
+                                          rows_per_tile=rpt, interpret=True))
+            bits = core.k * core.k
+            rows.append(row(
+                f"bfs_single/scale{scale}/{mode}(rows={rpt})", t_k * 1e6,
+                f"core_bits_per_s={bits / t_k:.3g}"))
+        t_bfs_k = timed(lambda: hybrid_bfs(ev, g.degree, root, core=core,
+                                           engine="bitmap").parent)
+        rows.append(row(f"bfs_single/scale{scale}/bitmap_engine",
+                        t_bfs_k * 1e6,
+                        f"GTEPS={m / t_bfs_k / 1e9:.5f};"
+                        "note=interpret-mode Pallas (CPU) — see DESIGN.md §8"))
+    return rows

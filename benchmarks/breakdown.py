@@ -1,0 +1,80 @@
+"""Paper Fig. 17: execution-time breakdown (computation vs communication)
+across communication policies.
+
+Computation phases are measured on CPU (core kernel / tail relax /
+frontier epilogue); the communication phase is modeled: bitmap-exchange
+bytes per level over the eq.(5) hop model with per-hop latency + link
+bandwidth, under each monitor policy. Mirrors the paper's stacked bars:
+naive -> random -> heaviest -> orchestra shrinks the comm share while
+compute stays ~constant.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, row, timed
+from repro.comms.topology import TreeTopology, elect_monitors, simulate_messages
+from repro.core import (
+    build_csr, build_heavy_core, degree_reorder, edge_view, generate_edges,
+    hybrid_bfs,
+)
+from repro.core.heavy import pack_bitmap
+from repro.core.reorder import relabel_edges
+from repro.kernels import ops as kops
+
+HOP_LATENCY_S = 1.1e-6 / 3     # MPI latency 1.1us over ~3 hops (paper §3.3)
+LINK_BYTES_S = 25e9 / 8        # 25 Gbps
+
+
+def run():
+    rows = []
+    scale = 10
+    edges = generate_edges(6, scale)
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)
+    g = build_csr(relabel_edges(edges, r))
+    ev = edge_view(g)
+    core = build_heavy_core(g, threshold=8)
+
+    # measured compute phases
+    f_bm = pack_bitmap(jnp.zeros((core.k,), bool).at[0].set(True), core.k // 32)
+    t_core = timed(lambda: kops.core_spmv(core.a_core, f_bm))
+    t_total = timed(lambda: hybrid_bfs(ev, g.degree, 0, core=core,
+                                       engine="bitmap").parent)
+    res = hybrid_bfs(ev, g.degree, 0, core=core, engine="bitmap")
+    levels = int(res.stats.levels)
+
+    # modeled communication per policy
+    topo = TreeTopology((4, 8, 4, 4))
+    rng = np.random.default_rng(0)
+    w = rng.pareto(1.5, topo.n_nodes) + 1
+    n_msgs = 4096
+    src, dst = simulate_messages(n_msgs, topo, seed=1, skew=w)
+    bitmap_bytes = g.num_vertices // 8
+
+    def comm_time(acc_hops, n_transfers):
+        return acc_hops * HOP_LATENCY_S + \
+            n_transfers * bitmap_bytes / LINK_BYTES_S
+
+    naive_hops = float(np.sum(topo.hops(src, dst)))
+    policies = {"naive": comm_time(naive_hops, n_msgs)}
+    for policy in ("random", "heaviest", "orchestra"):
+        plan = elect_monitors(topo, w, policy, seed=2)
+        hops = plan.batched_route_hops(src, dst)
+        # batching also collapses transfers to group-pair count
+        gs, gd = topo.group_of(src), topo.group_of(dst)
+        n_batched = len({(a, b) for a, b in zip(gs, gd)})
+        policies[policy] = comm_time(hops, n_batched)
+
+    compute_s = t_total
+    for policy, comm_s in policies.items():
+        total = compute_s + comm_s * levels
+        rows.append(row(
+            f"breakdown/{policy}", total * 1e6,
+            f"compute_us={compute_s * 1e6:.0f};"
+            f"comm_us={comm_s * levels * 1e6:.0f};"
+            f"comm_share={comm_s * levels / total:.2%};levels={levels}"))
+    rows.append(row("breakdown/core_kernel_per_level", t_core * 1e6,
+                    f"levels={levels}"))
+    return rows

@@ -1,0 +1,32 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FAST = os.environ.get("BENCH_FAST", "1") != "0"
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) in seconds (block_until_ready aware)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us_per_call: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}
+
+
+def print_rows(rows):
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

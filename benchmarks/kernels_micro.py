@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle on CPU.
+
+Interpret mode measures *correct semantics*, not TPU speed; the derived
+column reports logical throughput (bits or elements per second) as the
+unit the TPU projection multiplies.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, row, timed
+from repro.kernels import ref
+from repro.kernels.bitmap_ops import frontier_update
+from repro.kernels.frontier_spmv import core_spmv
+from repro.kernels.spmv_mxu import spmv_mxu
+from repro.kernels import ops
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    w = 8192
+    nxt = jnp.asarray(rng.integers(0, 2**32, w, dtype=np.uint32))
+    vis = jnp.asarray(rng.integers(0, 2**32, w, dtype=np.uint32))
+    t_k = timed(lambda: frontier_update(nxt, vis, interpret=True))
+    t_r = timed(lambda: ref.frontier_update_ref(nxt, vis))
+    rows.append(row("kernel/frontier_update/pallas", t_k * 1e6,
+                    f"bits_per_s={w * 32 / t_k:.3g}"))
+    rows.append(row("kernel/frontier_update/jnp_ref", t_r * 1e6,
+                    f"bits_per_s={w * 32 / t_r:.3g}"))
+
+    k = 4096
+    a = jnp.asarray(rng.integers(0, 2**32, (k, k // 32), dtype=np.uint32))
+    f = jnp.asarray(rng.integers(0, 2**32, k // 32, dtype=np.uint32))
+    t_k = timed(lambda: core_spmv(a, f, interpret=True))
+    t_r = timed(lambda: ref.core_spmv_ref(a, f))
+    rows.append(row("kernel/core_spmv/pallas", t_k * 1e6,
+                    f"edges_bits_per_s={k * k / t_k:.3g}"))
+    rows.append(row("kernel/core_spmv/jnp_ref", t_r * 1e6,
+                    f"edges_bits_per_s={k * k / t_r:.3g}"))
+
+    kk, rr = 512, 128
+    a8 = jnp.asarray((rng.random((kk, kk)) < 0.05).astype(np.int8))
+    f8 = jnp.asarray((rng.random((kk, rr)) < 0.1).astype(np.int8))
+    t_k = timed(lambda: spmv_mxu(a8, f8, interpret=True))
+    rows.append(row("kernel/spmv_mxu_multiroot/pallas", t_k * 1e6,
+                    f"mac_per_s={kk * kk * rr / t_k:.3g};roots={rr}"))
+
+    b, f0, fl, h, d = 256, 39, 200, 200, 10
+    x0 = jnp.asarray(rng.normal(size=(b, f0, d)).astype(np.float32))
+    xl = jnp.asarray(rng.normal(size=(b, fl, d)).astype(np.float32))
+    wcin = jnp.asarray(rng.normal(size=(h, f0, fl)).astype(np.float32))
+    t_k = timed(lambda: ops.cin_layer(x0, xl, wcin))
+    from repro.models.recsys import cin_layer_einsum
+    t_e = timed(lambda: cin_layer_einsum(x0, xl, wcin))
+    flops = 2.0 * b * h * f0 * fl * d
+    rows.append(row("kernel/cin/pallas", t_k * 1e6,
+                    f"flops_per_s={flops / t_k:.3g}"))
+    rows.append(row("kernel/cin/einsum_ref", t_e * 1e6,
+                    f"flops_per_s={flops / t_e:.3g}"))
+    return rows

@@ -1,0 +1,66 @@
+"""Paper Fig. 15/16: monitor-communication policies + accumulated hops.
+
+The hop numbers come from the eq.(5) 2-D-tree model (DESIGN.md §2 — no
+silicon here); the message trace is the bottom-up frontier-exchange
+pattern of a degree-sorted Kronecker graph: destinations skewed toward
+heavy-vertex owners, exactly the traffic the paper routes via monitors.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, row
+from repro.comms.topology import TreeTopology, elect_monitors, simulate_messages
+from repro.core import build_csr, degree_reorder, generate_edges
+
+
+def run():
+    rows = []
+    topo = TreeTopology((4, 8, 4, 4))  # 512 CNs, 4 per HFR-E
+    n_msgs = 20_000 if FAST else 200_000
+
+    # heavy-vertex weights per node: cyclic ownership of a degree-sorted
+    # Kronecker graph => node weight = sum of owned degrees
+    edges = generate_edges(4, 12)
+    g = build_csr(edges)
+    deg = np.asarray(degree_reorder(g.degree).degree_sorted)
+    owners = np.arange(len(deg)) % topo.n_nodes
+    w = np.bincount(owners, weights=deg, minlength=topo.n_nodes)
+
+    src, dst = simulate_messages(n_msgs, topo, seed=0, skew=w + 1.0)
+    naive = float(np.sum(topo.hops(src, dst)))
+    rows.append(row("monitor/naive", 0.0,
+                    f"acc_hops={naive:.0f};per_msg={naive / n_msgs:.2f}"))
+
+    for policy in ("random", "heaviest", "orchestra"):
+        t0 = time.perf_counter()
+        plan = elect_monitors(topo, w, policy, seed=1)
+        t_elect = (time.perf_counter() - t0) * 1e6
+        hops = plan.batched_route_hops(src, dst)
+        rows.append(row(
+            f"monitor/{policy}", t_elect,
+            f"acc_hops={hops:.0f};reduction={1 - hops / naive:.2%};"
+            f"per_msg={hops / n_msgs:.2f}"))
+
+    # scaling sweep (Fig. 16's x-axis): 4 -> 512 CNs. Message density is
+    # proportional to system size (a bottom-up BFS level emits O(V/P)
+    # messages PER NODE — the batching win requires realistic density;
+    # an early version used a fixed sparse count and measured a NEGATIVE
+    # reduction at 512 CN, because with ~0.3 messages per group pair the
+    # monitor detour cannot amortize — kept as a lesson in EXPERIMENTS.md).
+    for n_cn, fan in ((4, (4,)), (32, (4, 8)), (128, (4, 8, 4)),
+                      (512, (4, 8, 4, 4))):
+        t = TreeTopology(fan)
+        msgs = 512 * t.n_nodes
+        s, d = simulate_messages(msgs, t, seed=2, skew=None)
+        naive_n = float(np.sum(t.hops(s, d)))
+        wn = np.ones(t.n_nodes)
+        plan = elect_monitors(t, wn, "heaviest", seed=3)
+        hops = plan.batched_route_hops(s, d)
+        rows.append(row(
+            f"monitor_scaling/{n_cn}cn", 0.0,
+            f"naive={naive_n:.0f};monitor={hops:.0f};"
+            f"reduction={1 - hops / max(naive_n, 1):.2%};msgs={msgs}"))
+    return rows

@@ -1,0 +1,81 @@
+"""Roofline table builder — reads experiments/dryrun/*.json (deliverable g).
+
+Emits, per (arch x shape x mesh): the three terms in seconds, dominant
+bottleneck, MODEL_FLOPS ratio, HBM residency. Also renders the markdown
+table embedded in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_records(mesh: str = "singlepod", include_variants: bool = False):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
+        r = json.load(open(f))
+        if not include_variants and r.get("variant", "baseline") != "baseline":
+            continue
+        recs.append(r)
+    return recs
+
+
+def fraction(r):
+    """Achievable-fraction proxy: compute term / max(all terms) — how much
+    of the step time would be MXU-busy at the roofline bound."""
+    t = r["roofline"]
+    hi = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return t["compute_s"] / hi if hi > 0 else 0.0
+
+
+def markdown_table(mesh: str = "singlepod") -> str:
+    recs = [r for r in load_records(mesh) if r.get("ok")]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| roofline frac | MODEL/HLO flops | HBM/dev GiB | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        hbm = (r.get("hbm_per_device_bytes") or 0) / 2**30
+        note = r.get("skip_reason") or ("suppl." if r.get("supplementary") else "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} "
+            f"| {t['memory_s']:.3g} | {t['collective_s']:.3g} "
+            f"| {r['bottleneck'].replace('_s', '')} | {fraction(r):.2f} "
+            f"| {r.get('model_flops_ratio', 0):.2f} | {hbm:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for mesh in ("singlepod", "multipod"):
+        recs = [r for r in load_records(mesh) if r.get("ok")]
+        if not recs:
+            continue
+        worst = min(recs, key=fraction)
+        most_coll = max(recs, key=lambda r: r["roofline"]["collective_s"])
+        rows.append(row(
+            f"roofline/{mesh}/cells", 0.0,
+            f"n={len(recs)};worst_frac={worst['arch']}/{worst['shape']}"
+            f"({fraction(worst):.3f});most_collective="
+            f"{most_coll['arch']}/{most_coll['shape']}"
+            f"({most_coll['roofline']['collective_s']:.3g}s)"))
+        for r in recs:
+            t = r["roofline"]
+            rows.append(row(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                max(t.values()) * 1e6,
+                f"frac={fraction(r):.3f};bottleneck={r['bottleneck']};"
+                f"compute={t['compute_s']:.3g};mem={t['memory_s']:.3g};"
+                f"coll={t['collective_s']:.3g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table("singlepod"))

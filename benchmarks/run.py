@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper figure/table.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run degree_census monitor_policies
+    BENCH_FAST=0 PYTHONPATH=src python -m benchmarks.run   # full scales
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "degree_census",      # Fig. 7
+    "bfs_single",         # Fig. 10/11
+    "sorting_policies",   # Fig. 12/13
+    "heavy_threshold",    # Fig. 14
+    "monitor_policies",   # Fig. 15/16
+    "breakdown",          # Fig. 17
+    "version_ladder",     # Fig. 18
+    "kernels_micro",      # kernel-level validation throughputs
+    "roofline",           # deliverable (g) summary from the dry-run JSONs
+]
+
+
+def main() -> None:
+    want = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in want:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run()
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark modules failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 18: the version ladder — reference-3.0.0 / TH-2 / K / Pre-G500.
+
+Two views are reported per rung:
+  * measured CPU GTEPS (XLA + interpret-mode Pallas — absolute numbers are
+    container-bound, see DESIGN.md §8);
+  * the *work model*: algorithmic edges scanned per search, which is
+    hardware-independent and shows the direction-optimization + heavy-core
+    effect the paper's 3.15x rests on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FAST, row, timed
+from repro.core import Graph500Config, build, run as run_g500
+from repro.core.hybrid_bfs import hybrid_bfs
+
+
+def run():
+    rows = []
+    scale = 10 if FAST else 12
+    rungs = ("reference-3.0.0", "th2", "k", "pre-g500")
+    teps = {}
+    for rung in rungs:
+        cfg = Graph500Config.ladder(rung, scale=scale, n_roots=2)
+        built, result = run_g500(cfg)
+        teps[rung] = result.harmonic_mean_teps
+        # work model: scanned edges from per-level stats
+        res = hybrid_bfs(built.ev, built.degree, 0, core=built.core,
+                         engine=cfg.engine, alpha=cfg.alpha, beta=cfg.beta)
+        scanned = int(np.asarray(res.stats.scanned_edges).sum())
+        m = int(np.asarray(result.edges)[0])
+        rows.append(row(
+            f"ladder/{rung}", result.mean_time_s * 1e6,
+            f"GTEPS={teps[rung] / 1e9:.5f};scanned_edges={scanned};"
+            f"work_ratio={scanned / max(2 * m, 1):.2f};valid={result.all_valid}"))
+    speedup = teps["pre-g500"] / max(teps["k"], 1e-9)
+    rows.append(row(
+        "ladder/speedup_pre-g500_vs_k", 0.0,
+        f"speedup={speedup:.2f}x;paper_reports=3.15x_at_512cn;"
+        "note=single-CPU-container — see EXPERIMENTS.md ladder discussion"))
+    return rows

@@ -1,0 +1,44 @@
+"""Distributed BFS with monitor communication on 8 host devices.
+
+    PYTHONPATH=src python examples/distributed_bfs.py
+
+Demonstrates T3: the frontier exchange runs as the two-phase hierarchical
+(monitor) all-gather over a (group, member) mesh, and matches the
+sequential oracle exactly.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_csr, degree_reorder, generate_edges
+from repro.core.distributed_bfs import gather_result, make_dist_bfs, shard_graph
+from repro.core.graph_build import csr_to_edge_arrays
+from repro.core.reference import reference_bfs
+from repro.core.reorder import relabel_edges
+
+mesh = jax.make_mesh((2, 4), ("group", "member"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
+
+edges = generate_edges(5, 12)
+g0 = build_csr(edges)
+r = degree_reorder(g0.degree)          # T2a: heavy vertices get low ids
+g = build_csr(relabel_edges(edges, r))
+src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
+sg = shard_graph(src, dst, valid, g.num_vertices, 8)  # eq.3 cyclic owners
+print(f"graph: {g.num_vertices} vertices, {int(g.nnz)} directed edges, "
+      f"{sg.src.shape[1]} edges/device")
+
+for hierarchical in (True, False):
+    bfs = make_dist_bfs(mesh, sg, hierarchical=hierarchical)
+    res = bfs(jnp.int32(0))
+    parent, level = gather_result(res, sg)
+    _, l_ref = reference_bfs(np.asarray(g.row_offsets),
+                             np.asarray(g.col_indices), 0)
+    ok = np.array_equal(level[:g.num_vertices], l_ref)
+    mode = "monitor (hierarchical)" if hierarchical else "flat all-gather"
+    print(f"{mode:26s}: levels={int(res.levels_run)} match_oracle={ok}")

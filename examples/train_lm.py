@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Kill it mid-run and re-invoke: it resumes from the last checkpoint and
+produces the same trajectory (tested in tests/test_train.py).
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get
+from repro.data.synthetic import lm_batch
+from repro.models import transformer as T
+from repro.optim import AdamW, wsd
+from repro.train import train_step as TS
+from repro.train.loop import LoopConfig, run_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--arch", default="minicpm-2b")
+    args = ap.parse_args()
+
+    # ~100M-param variant of the assigned arch (reduced width/depth)
+    cfg = dataclasses.replace(
+        get(args.arch).make_smoke_config(),
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, d_ff=1536,
+        vocab=32768)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} variant, {n_params / 1e6:.1f}M params")
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    # minicpm trains with the WSD schedule (paper-faithful choice)
+    opt = AdamW(wsd(3e-4, warmup=20, stable=args.steps - 80, decay=60))
+    opt_state = opt.init(params)
+    step = jax.jit(TS.make_lm_train_step(cfg, opt))
+
+    lc = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                    ckpt_every=50, log_every=10)
+    params, opt_state, losses = run_loop(
+        lc, params, opt_state, step,
+        lambda i: lm_batch(0, i, args.batch, args.seq, cfg.vocab))
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

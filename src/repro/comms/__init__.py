@@ -1,0 +1,20 @@
+"""Group-based monitor communication, generalized (paper T3)."""
+from repro.comms.topology import (
+    TreeTopology,
+    MonitorPlan,
+    elect_monitors,
+    simulate_messages,
+)
+from repro.comms.hierarchical import (
+    hierarchical_all_to_all,
+    hierarchical_all_gather,
+    hierarchical_psum,
+    compressed_hierarchical_psum,
+    flat_all_to_all,
+)
+
+__all__ = [
+    "TreeTopology", "MonitorPlan", "elect_monitors", "simulate_messages",
+    "hierarchical_all_to_all", "hierarchical_all_gather",
+    "hierarchical_psum", "compressed_hierarchical_psum", "flat_all_to_all",
+]

@@ -1,0 +1,6 @@
+"""Architecture configs. Importing this package registers all archs."""
+from repro.configs import base
+from repro.configs import gnn_archs, graph500_arch, lm_archs, recsys_archs  # noqa: F401
+from repro.configs.base import REGISTRY, all_arch_ids, all_cells, get
+
+__all__ = ["base", "REGISTRY", "all_arch_ids", "all_cells", "get"]

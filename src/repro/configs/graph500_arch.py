@@ -1,0 +1,22 @@
+"""The paper's own workload as an architecture: distributed hybrid BFS.
+
+Not one of the 10 assigned archs (those are the pool entries); registered
+so the dry-run proves the *paper technique itself* lowers to the
+production meshes — the Pre-G500 rows of EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec, GRAPH500_SHAPES, register
+from repro.core.pipeline import Graph500Config
+
+
+register(ArchSpec(
+    arch_id="graph500", family="graph500",
+    make_config=lambda: Graph500Config(scale=26, n_roots=64,
+                                       engine="bitmap", heavy_threshold=100),
+    make_smoke_config=lambda: Graph500Config(scale=10, n_roots=4,
+                                             engine="bitmap",
+                                             heavy_threshold=8),
+    shapes=GRAPH500_SHAPES, source="paper (Gan 2021)",
+    notes="distributed BFS via shard_map; frontier exchange = T3 monitor "
+          "all-gather"))

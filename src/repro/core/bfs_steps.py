@@ -1,0 +1,95 @@
+"""Single BFS level steps (pure-JAX reference engines).
+
+A BFS level over an undirected graph is a Boolean-semiring SpMV
+(DESIGN.md §2). With JAX's static-shape constraint the natural TPU-native
+formulation is *edge-parallel relaxation*: every directed CSR entry
+``(u -> v)`` tests ``frontier[u] & ~visited[v]`` and scatter-mins its source
+into ``parent[v]``. Top-down and bottom-up coincide in this fully
+vectorized form — the *direction* distinction re-appears in
+
+  * the kernelized bottom-up core step (``kernels/frontier_spmv``), which
+    scans the dense heavy-vertex corner bitmap-wide with early-exit-free
+    VPU ops (the paper's SVE scan, §4.1), and
+  * the distributed engine, where direction decides what is communicated
+    (frontier queues vs visited bitmaps, §2.1 table 1 of the paper).
+
+Scatter-min convention: ``parent[v] == V`` (sentinel) means unvisited; the
+root points at itself. The winning parent is the minimum frontier
+neighbor id — deterministic, and after degree sorting that is also the
+*heaviest* neighbor, which shortens validation chains.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_build import CSRGraph, csr_to_edge_arrays
+from repro.util import pytree_dataclass
+
+
+@pytree_dataclass(meta=("num_vertices",))
+class EdgeView:
+    """Edge-parallel view of a CSR graph (static shapes)."""
+
+    src: jax.Array    # [E_pad] int32 (sentinel V on padding)
+    dst: jax.Array    # [E_pad] int32
+    valid: jax.Array  # [E_pad] bool
+    num_vertices: int
+
+
+def edge_view(g: CSRGraph) -> EdgeView:
+    s, d, valid = csr_to_edge_arrays(g)
+    s = jnp.where(valid, s, g.num_vertices)
+    d = jnp.where(valid, d, g.num_vertices)
+    return EdgeView(s, d, valid, g.num_vertices)
+
+
+def relax_step(
+    ev: EdgeView,
+    parent: jax.Array,     # [V+1] int32 (slot V is scratch)
+    frontier: jax.Array,   # [V] bool
+    visited: jax.Array,    # [V] bool
+) -> tuple[jax.Array, jax.Array]:
+    """One level: relax all edges whose source is in the frontier.
+
+    Returns ``(new_parent, next_frontier)``.
+    """
+    v = ev.num_vertices
+    f_ext = jnp.concatenate([frontier, jnp.zeros((1,), bool)])
+    vis_ext = jnp.concatenate([visited, jnp.ones((1,), bool)])
+    active = ev.valid & f_ext[ev.src] & ~vis_ext[ev.dst]
+    cand = jnp.where(active, ev.src, v).astype(jnp.int32)
+    tgt = jnp.where(active, ev.dst, v)
+    new_parent = parent.at[tgt].min(cand)
+    next_frontier = (new_parent[:v] != v) & ~visited
+    return new_parent, next_frontier
+
+
+def masked_relax_step(
+    ev: EdgeView,
+    parent: jax.Array,
+    frontier: jax.Array,
+    visited: jax.Array,
+    edge_mask: jax.Array,  # [E_pad] bool — restrict relaxation (tail edges)
+) -> tuple[jax.Array, jax.Array]:
+    """Relax only edges with ``edge_mask`` set (used to exclude the dense core)."""
+    v = ev.num_vertices
+    f_ext = jnp.concatenate([frontier, jnp.zeros((1,), bool)])
+    vis_ext = jnp.concatenate([visited, jnp.ones((1,), bool)])
+    active = ev.valid & edge_mask & f_ext[ev.src] & ~vis_ext[ev.dst]
+    cand = jnp.where(active, ev.src, v).astype(jnp.int32)
+    tgt = jnp.where(active, ev.dst, v)
+    new_parent = parent.at[tgt].min(cand)
+    next_frontier = (new_parent[:v] != v) & ~visited
+    return new_parent, next_frontier
+
+
+def frontier_edge_count(degree: jax.Array, frontier: jax.Array) -> jax.Array:
+    """Edges incident to the frontier — the m_f quantity in the direction switch."""
+    return jnp.sum(jnp.where(frontier, degree, 0))
+
+
+def unvisited_edge_count(degree: jax.Array, visited: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.where(visited, 0, degree))

@@ -1,0 +1,228 @@
+"""Distributed hybrid BFS over a (group, member) device mesh (T2 + T3).
+
+Partitioning (paper §4.2, eq. 3): after degree sorting, vertex v is owned
+cyclically — ``owner(v) = v % P``, local slot ``v // P`` — so heavy
+vertices (low new IDs) spread evenly across ranks, "which effectively
+reduces load imbalance among processes and CNs". Edges are partitioned by
+**destination owner** (bottom-up orientation: each device relaxes the
+edges pointing at its own vertices).
+
+Per level (all inside one ``shard_map`` + ``lax.while_loop``):
+  1. every device packs its local next-frontier bits;
+  2. the global frontier bitmap is assembled with the *monitor exchange* —
+     ``hierarchical_all_gather``: gather over ``group`` (mirror phase),
+     then over ``member`` (intra-group delivery). The flat variant is kept
+     for the ablation benchmark;
+  3. local edge relaxation against the global frontier bitmap updates the
+     locally-owned parents.
+
+The visited/parent state never leaves its owner — only frontier bitmaps
+travel, V/8 bytes per level, exactly the paper's bitmap communication
+design (§2.3, Ueno et al. bitmap representation).
+
+This module is exercised two ways:
+  * tests/test_distributed.py runs it on 8 host devices (subprocess);
+  * launch/dryrun.py lowers it for the 256/512-chip production meshes as
+    the ``graph500`` architecture rows of the dry-run table.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.comms.hierarchical import hierarchical_all_gather
+from repro.core.heavy import pack_bitmap
+from repro.util import pytree_dataclass
+
+MAX_LEVELS = 64
+
+
+@pytree_dataclass(meta=("num_vertices", "n_devices"))
+class ShardedGraph:
+    """Edge lists pre-partitioned by destination owner, stacked [P, E_loc]."""
+
+    src: jax.Array      # [P, E_loc] int32 global src id (sentinel V pads)
+    dst_local: jax.Array  # [P, E_loc] int32 local slot of dst on owner
+    valid: jax.Array    # [P, E_loc] bool
+    degree_local: jax.Array  # [P, V_loc] int32 degree of owned vertices
+    num_vertices: int   # padded global V (multiple of 32 * P)
+    n_devices: int
+
+
+def shard_graph(src, dst, valid, num_vertices: int, n_devices: int) -> ShardedGraph:
+    """Host-side partitioner: cyclic ownership, destination-owner edge split."""
+    import numpy as np
+
+    p = n_devices
+    v_pad = ((num_vertices + 32 * p - 1) // (32 * p)) * (32 * p)
+    src = np.asarray(src); dst = np.asarray(dst); valid = np.asarray(valid)
+    owner = dst % p
+    counts = np.bincount(owner[valid], minlength=p)
+    e_loc = int(counts.max()) if counts.size else 1
+    e_loc = max(1, ((e_loc + 127) // 128) * 128)
+    s = np.full((p, e_loc), v_pad, np.int32)
+    dl = np.full((p, e_loc), 0, np.int32)
+    va = np.zeros((p, e_loc), bool)
+    fill = np.zeros(p, np.int64)
+    for pe in range(p):
+        sel = valid & (owner == pe)
+        k = int(sel.sum())
+        s[pe, :k] = src[sel]
+        dl[pe, :k] = dst[sel] // p
+        va[pe, :k] = True
+        fill[pe] = k
+    v_loc = v_pad // p
+    deg = np.zeros((p, v_loc), np.int32)
+    np.add.at(deg, (owner[valid], dst[valid] // p), 1)
+    return ShardedGraph(
+        src=jnp.asarray(s), dst_local=jnp.asarray(dl), valid=jnp.asarray(va),
+        degree_local=jnp.asarray(deg), num_vertices=v_pad, n_devices=p,
+    )
+
+
+class DistBFSResult(NamedTuple):
+    parent: jax.Array  # [P, V_loc] int32 global parent id (-1 unvisited)
+    level: jax.Array   # [P, V_loc]
+    levels_run: jax.Array
+
+
+def _local_level(src, dst_local, valid, frontier_bm, parent_loc, v_pad):
+    """Relax local edges against the global frontier bitmap."""
+    word = frontier_bm[jnp.clip(src // 32, 0, frontier_bm.shape[0] - 1)]
+    in_frontier = ((word >> (src % 32).astype(jnp.uint32)) & jnp.uint32(1)).astype(bool)
+    unvisited = parent_loc == v_pad
+    active = valid & in_frontier & unvisited[dst_local]
+    cand = jnp.where(active, src, v_pad).astype(jnp.int32)
+    tgt = jnp.where(active, dst_local, parent_loc.shape[0])
+    new_parent = jnp.concatenate([parent_loc, jnp.full((1,), v_pad, jnp.int32)])
+    new_parent = new_parent.at[tgt].min(cand)[:-1]
+    newly = (new_parent != v_pad) & unvisited
+    return new_parent, newly
+
+
+def make_dist_bfs(
+    mesh: Mesh,
+    g: ShardedGraph,
+    *,
+    group_axis="group",
+    member_axis="member",
+    hierarchical: bool = True,
+    max_levels: int = MAX_LEVELS,
+):
+    """Build the jitted distributed BFS fn(root) for a pre-sharded graph.
+
+    ``group_axis``/``member_axis`` may be single names or tuples of mesh
+    axis names (e.g. group=("pod", "data"), member="model" on the
+    multi-pod production mesh)."""
+    p = g.n_devices
+    v_pad = g.num_vertices
+    v_loc = v_pad // p
+    gaxes = group_axis if isinstance(group_axis, tuple) else (group_axis,)
+    maxes = member_axis if isinstance(member_axis, tuple) else (member_axis,)
+    axes = gaxes + maxes
+
+    def _flat_index(names):
+        idx = jnp.int32(0)
+        for n in names:
+            idx = idx * lax.axis_size(n) + lax.axis_index(n)
+        return idx
+
+    def local_bfs(root, src, dst_local, valid):
+        # device coordinates -> global device index (cyclic owner id)
+        gi = _flat_index(gaxes)
+        mi = _flat_index(maxes)
+        m = 1
+        for n in maxes:
+            m = m * lax.axis_size(n)
+        dev = gi * m + mi
+        src, dst_local, valid = src[0], dst_local[0], valid[0]
+
+        parent = jnp.full((v_loc,), v_pad, jnp.int32)
+        is_mine = (root % p) == dev
+        slot = root // p
+        parent = jnp.where(
+            (jnp.arange(v_loc) == slot) & is_mine, root, parent)
+        level = jnp.where(parent != v_pad, 0, -1).astype(jnp.int32)
+        newly = parent != v_pad
+
+        def exchange(newly_bits):
+            # local new-frontier bits, cyclic layout: bit for local slot i
+            # corresponds to global vertex i*P + dev. We gather the
+            # *local* bitmaps and rely on the same cyclic convention when
+            # testing membership (src // 32 below uses owner-major order).
+            local_bm = pack_bitmap(newly_bits, v_loc // 32)
+            if hierarchical:
+                gathered = hierarchical_all_gather(
+                    local_bm, group_axis, member_axis)
+            else:
+                gathered = lax.all_gather(local_bm, axes, axis=0, tiled=True)
+            return gathered  # [P * v_loc//32] owner-major words
+
+        def cond(st):
+            _, _, _, any_new, lvl = st
+            return any_new & (lvl < max_levels)
+
+        def body(st):
+            parent, level, newly, _, lvl = st
+            frontier_bm = exchange(newly)
+            # owner-major layout: global vertex v = owner * v_loc + slot in
+            # bitmap space; translate edge src (cyclic id) to owner-major.
+            src_owner_major = (src % p) * v_loc + src // p
+            src_om = jnp.where(valid, src_owner_major, p * v_loc)
+            new_parent, newly2 = _local_level(
+                src_om, dst_local, valid, frontier_bm, parent, v_pad)
+            # new_parent currently holds owner-major candidate ids; convert
+            # back to true vertex ids: om = owner * v_loc + slot ->
+            # v = slot * p + owner.
+            won = newly2
+            om = new_parent
+            tru = jnp.where(
+                won, (om % v_loc) * p + om // v_loc, new_parent)
+            parent = jnp.where(won, tru, parent)
+            level = jnp.where(won, lvl, level)
+            any_new = lax.psum(
+                jnp.sum(won.astype(jnp.int32)), axes) > 0
+            return parent, level, won, any_new, lvl + 1
+
+        # any_new starts as an axis-invariant constant (the root exists
+        # somewhere); the loop body replaces it with a global psum.
+        init = (parent, level, newly, jnp.bool_(True), jnp.int32(1))
+        parent, level, _, _, lvl = lax.while_loop(cond, body, init)
+        parent = jnp.where(parent == v_pad, -1, parent)
+        return parent[None], level[None], lvl[None]
+
+    fn = jax.shard_map(
+        local_bfs,
+        mesh=mesh,
+        in_specs=(P(), P(axes), P(axes), P(axes)),
+        out_specs=(P(axes), P(axes), P(axes)),
+    )
+
+    @jax.jit
+    def run(root: jax.Array) -> DistBFSResult:
+        parent, level, lvls = fn(root, g.src, g.dst_local, g.valid)
+        return DistBFSResult(parent, level, jnp.max(lvls))
+
+    return run
+
+
+def gather_result(res: DistBFSResult, g: ShardedGraph):
+    """Reassemble owner-sharded (parent, level) into global vertex order."""
+    import numpy as np
+
+    p = g.n_devices
+    v_loc = g.num_vertices // p
+    parent = np.asarray(res.parent)  # [P, V_loc]
+    level = np.asarray(res.level)
+    out_p = np.full(g.num_vertices, -1, np.int64)
+    out_l = np.full(g.num_vertices, -1, np.int64)
+    for dev in range(p):
+        ids = np.arange(v_loc) * p + dev
+        out_p[ids] = parent[dev]
+        out_l[ids] = level[dev]
+    return out_p, out_l

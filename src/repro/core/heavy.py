@@ -1,0 +1,149 @@
+"""Paper technique T2b: heavy-vertex buffering — TPU adaptation.
+
+Paper (§4.2): vertices with degree >= D (default 100, ~5% of active
+vertices) are "heavy"; their edges are *stolen* out of the owning rank's
+column into a replicated ``buffer_column`` so (a) every rank holds ~N/size
+of each heavy vertex's edges (load balance) and (b) membership tests for
+heavy vertices hit a small local bitmap (~2 MB/node) instead of remote
+memory.
+
+TPU adaptation (DESIGN.md §2): after degree sorting, the heavy prefix
+``[0, K)`` forms a *near-dense* corner of the adjacency matrix. We exploit
+that structurally:
+
+  * ``A_core`` — the K x K corner packed as a ``uint32`` bitmap
+    (``[K, K/32]``). A bottom-up BFS level restricted to the core is a
+    Boolean mat-vec ``next = (A_core & frontier).any(axis=1)`` — executed
+    by the Pallas kernel ``kernels/frontier_spmv.py`` in 8x128 VPU tiles
+    (the SVE scan loop, 3 orders of magnitude wider).
+  * ``halo`` — core-row edges that leave the core (dst >= K) stay in CSR
+    form (they are the "rest_column" of eq. (4)).
+  * The core bitmap is the structure that gets *replicated per device
+    group* in the distributed traversal, exactly the paper's buffer:
+    K = 2**20 heavy vertices cost K/8 = 128 KiB per frontier bitmap and
+    ``K*K/8`` core bytes sharded over the group.
+
+Eq.-(4) invariant  {column} = {buffer_column} ∪ {rest_column},
+{buffer_column} ∩ {rest_column} = ∅  is asserted in tests: every core edge
+lands in exactly one of A_core / halo.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_build import CSRGraph, csr_to_edge_arrays
+from repro.util import pytree_dataclass
+
+# Pallas tile geometry: rows per tile x words per tile. K is padded so the
+# core row length divides into 128-lane uint32 word tiles (4096 bits) and
+# the row count into 8-row tiles. Minimum core = 4096 x 128 words = 2 MiB —
+# exactly the paper's per-node buffer budget (§4.2).
+CORE_ALIGN = 4096  # vertices; 4096 bits = 128 words = one lane tile per row
+
+
+@pytree_dataclass(meta=("k", "threshold"))
+class HeavyCore:
+    """Dense heavy-vertex core + sparse halo, per DESIGN.md §2 (T2)."""
+
+    a_core: jax.Array        # [K, K//32] uint32 — packed Boolean adjacency
+    k: int                   # static: padded heavy-prefix size (multiple of 1024)
+    k_heavy: jax.Array       # [] int32 — true number of heavy vertices
+    threshold: int           # static: degree threshold D (paper: 100)
+    # halo: core-source edges leaving the core, CSR-like (static shape)
+    halo_src: jax.Array      # [H_pad] int32 (sentinel V when invalid)
+    halo_dst: jax.Array      # [H_pad] int32
+    halo_valid: jax.Array    # [H_pad] bool
+    core_nnz: jax.Array      # [] int32 — edges inside the core
+
+
+def heavy_count(degree_sorted: jax.Array, threshold: int) -> jax.Array:
+    """Number of vertices with degree >= threshold (prefix length after sort)."""
+    return jnp.sum(degree_sorted >= threshold).astype(jnp.int32)
+
+
+def pad_k(k_heavy: int, v: int) -> int:
+    """Pad the heavy prefix length up to the Pallas tile alignment."""
+    k = max(CORE_ALIGN, ((int(k_heavy) + CORE_ALIGN - 1) // CORE_ALIGN) * CORE_ALIGN)
+    return min(k, max(CORE_ALIGN, (v // CORE_ALIGN) * CORE_ALIGN))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _build_core(src, dst, valid, *, k: int):
+    words = k // 32
+    in_core = valid & (src < k) & (dst < k)
+    # Dedupe upstream guarantees each (src, dst) occurs once, so the bit
+    # scatter can use add (== bitwise or for disjoint single-bit values).
+    word_idx = jnp.where(in_core, src * words + dst // 32, k * words)
+    bit = jnp.where(in_core, jnp.uint32(1) << (dst % 32).astype(jnp.uint32), 0)
+    flat = jnp.zeros((k * words + 1,), jnp.uint32).at[word_idx].add(bit)
+    a_core = flat[:-1].reshape(k, words)
+    core_nnz = jnp.sum(in_core).astype(jnp.int32)
+    return a_core, core_nnz
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _split_halo(src, dst, valid, *, k: int):
+    # Core-row edges that exit the core ("rest_column" of eq. 4).
+    is_halo = valid & (src < k) & (dst >= k)
+    return is_halo
+
+
+def build_heavy_core(g: CSRGraph, threshold: int = 100, k_static: int | None = None) -> HeavyCore:
+    """Extract the dense core of a *degree-sorted* CSR graph.
+
+    ``k_static`` pins the padded prefix length (needed under jit); when
+    None it is computed eagerly from the degree census.
+    """
+    src, dst, valid = csr_to_edge_arrays(g)
+    k_heavy = heavy_count(g.degree, threshold)
+    k = k_static if k_static is not None else pad_k(int(k_heavy), g.num_vertices)
+    a_core, core_nnz = _build_core(src, dst, valid, k=k)
+    is_halo = _split_halo(src, dst, valid, k=k)
+    sentinel = g.num_vertices
+    halo_src = jnp.where(is_halo, src, sentinel)
+    halo_dst = jnp.where(is_halo, dst, sentinel)
+    return HeavyCore(
+        a_core=a_core,
+        k=k,
+        k_heavy=k_heavy,
+        threshold=threshold,
+        halo_src=halo_src,
+        halo_dst=halo_dst,
+        halo_valid=is_halo,
+        core_nnz=core_nnz,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bitmap helpers shared by the BFS engines (uint32, little-endian bit order).
+# ---------------------------------------------------------------------------
+
+def bitmap_words(n_bits: int) -> int:
+    return (n_bits + 31) // 32
+
+
+def pack_bitmap(mask: jax.Array, n_words: int | None = None) -> jax.Array:
+    """bool [N] -> uint32 [ceil(N/32)] (positions beyond N are zero)."""
+    n = mask.shape[0]
+    w = n_words if n_words is not None else bitmap_words(n)
+    pad = w * 32 - n
+    m = jnp.concatenate([mask, jnp.zeros((pad,), bool)]) if pad else mask
+    bits = m.reshape(w, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack_bitmap(bm: jax.Array, n_bits: int) -> jax.Array:
+    """uint32 [W] -> bool [n_bits]."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (bm[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1)[:n_bits].astype(bool)
+
+
+def testbit(bm: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather bit ``idx`` from a packed bitmap (idx may be any int array)."""
+    word = bm[idx // 32]
+    return ((word >> (idx % 32).astype(jnp.uint32)) & jnp.uint32(1)).astype(bool)

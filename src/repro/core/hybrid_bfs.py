@@ -1,0 +1,203 @@
+"""Direction-optimizing hybrid BFS (paper §2.1) with selectable engines.
+
+Switching policy — paper eq. (1)/(2), Fig. 1::
+
+    top-down  -> bottom-up  when |in| > ThrV1 = (|V| - |vis|) / alpha
+    bottom-up -> top-down   when |in| < ThrV2 = |V| / beta
+
+``|V|`` counts *active* (non-isolated) vertices — the isolated ~50%
+(paper Fig. 7) are pruned by the degree sort and never traversed.
+
+Engines:
+  * ``reference`` — pure-jnp edge-parallel relaxation both directions.
+  * ``bitmap``    — the customized path: bottom-up levels run the dense
+    heavy-core Pallas kernel (``kernels/frontier_spmv``) plus masked tail
+    relaxation; the frontier epilogue (mask/merge/popcount) runs the fused
+    ``kernels/bitmap_ops`` kernel on packed uint32 bitmaps. This is the
+    Pre-G500 engine of the paper (T1 + T2); ``reference`` is the
+    reference-3.0.0 rung of Fig. 18's ladder.
+
+Everything is a single ``lax.while_loop`` under jit; per-level statistics
+(direction, frontier size, scanned edges) land in fixed-size arrays for
+the Fig. 17 breakdown benchmark.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfs_steps import (
+    EdgeView,
+    frontier_edge_count,
+    masked_relax_step,
+    relax_step,
+)
+from repro.core.heavy import HeavyCore, pack_bitmap
+from repro.kernels import ops as kops
+from repro.kernels.ref import BIG
+
+MAX_LEVELS = 64
+TOP_DOWN, BOTTOM_UP = jnp.int32(0), jnp.int32(1)
+
+
+class BFSStats(NamedTuple):
+    direction: jax.Array        # [MAX_LEVELS] int32 (-1 unused)
+    frontier_size: jax.Array    # [MAX_LEVELS] int32
+    scanned_edges: jax.Array    # [MAX_LEVELS] int32 — work estimate per level
+    levels: jax.Array           # [] int32
+
+
+class BFSResult(NamedTuple):
+    parent: jax.Array  # [V] int32, -1 = unvisited, parent[root] == root
+    level: jax.Array   # [V] int32, -1 = unvisited
+    stats: BFSStats
+
+
+class _State(NamedTuple):
+    parent_ext: jax.Array
+    frontier: jax.Array
+    visited: jax.Array
+    level: jax.Array
+    lvl: jax.Array
+    direction: jax.Array
+    stats_dir: jax.Array
+    stats_fs: jax.Array
+    stats_se: jax.Array
+
+
+def _core_bottom_up(core: HeavyCore, frontier, visited, parent_ext, v):
+    """Dense-core kernel step + tail relaxation mask combine."""
+    k = core.k
+    if k > v:  # tiny graph: core padding exceeds |V|
+        frontier_k = jnp.pad(frontier, (0, k - v))
+        visited_k = jnp.pad(visited, (0, k - v), constant_values=True)
+    else:
+        frontier_k, visited_k = frontier[:k], visited[:k]
+    f_bm = pack_bitmap(frontier_k, k // 32)
+    cand = kops.core_spmv(core.a_core, f_bm)          # int32 [K]
+    rows = jnp.arange(k, dtype=jnp.int32)
+    won = (cand < BIG) & ~visited_k
+    tgt = jnp.where(won, rows, v)
+    return parent_ext.at[tgt].min(jnp.where(won, cand, v).astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("engine", "alpha", "beta", "use_core", "max_levels"),
+)
+def _run(
+    ev: EdgeView,
+    degree: jax.Array,
+    n_active: jax.Array,
+    root: jax.Array,
+    core: HeavyCore | None,
+    *,
+    engine: str,
+    alpha: float,
+    beta: float,
+    use_core: bool,
+    max_levels: int,
+) -> BFSResult:
+    v = ev.num_vertices
+    parent_ext = jnp.full((v + 1,), v, jnp.int32).at[root].set(root)
+    frontier = jnp.zeros((v,), bool).at[root].set(True)
+    visited = frontier
+    level = jnp.full((v,), -1, jnp.int32).at[root].set(0)
+
+    if use_core:
+        core_edge = (ev.src < core.k) & (ev.dst < core.k)
+        tail_mask = ~core_edge
+    else:
+        tail_mask = None
+
+    def cond(s: _State):
+        return jnp.any(s.frontier) & (s.lvl < max_levels)
+
+    def body(s: _State):
+        in_count = jnp.sum(s.frontier).astype(jnp.int32)
+        vis_count = jnp.sum(s.visited).astype(jnp.int32)
+        thrv1 = ((n_active - vis_count).astype(jnp.float32) / alpha).astype(jnp.int32)
+        thrv2 = (n_active.astype(jnp.float32) / beta).astype(jnp.int32)
+        direction = jnp.where(
+            (s.direction == TOP_DOWN) & (in_count > thrv1),
+            BOTTOM_UP,
+            jnp.where(
+                (s.direction == BOTTOM_UP) & (in_count < thrv2),
+                TOP_DOWN,
+                s.direction,
+            ),
+        )
+
+        if engine == "reference" or not use_core:
+            new_parent, nxt = relax_step(ev, s.parent_ext, s.frontier, s.visited)
+        else:
+            def bu(_):
+                p1 = _core_bottom_up(core, s.frontier, s.visited, s.parent_ext, v)
+                p2, _ = masked_relax_step(ev, p1, s.frontier, s.visited, tail_mask)
+                return p2
+
+            def td(_):
+                p, _ = relax_step(ev, s.parent_ext, s.frontier, s.visited)
+                return p
+
+            new_parent = jax.lax.cond(direction == BOTTOM_UP, bu, td, None)
+            nxt = (new_parent[:v] != v) & ~s.visited
+
+        # scanned-edge estimate: TD scans frontier adjacency; BU scans
+        # unvisited adjacency (vectorized engines scan all, we report the
+        # algorithmic work the direction choice implies — paper Fig. 17).
+        m_f = frontier_edge_count(degree, s.frontier)
+        m_u = jnp.sum(jnp.where(s.visited, 0, degree))
+        scanned = jnp.where(direction == TOP_DOWN, m_f, m_u).astype(jnp.int32)
+
+        visited = s.visited | nxt
+        new_level = jnp.where(nxt, s.lvl + 1, s.level)
+        stats_dir = s.stats_dir.at[s.lvl].set(direction)
+        stats_fs = s.stats_fs.at[s.lvl].set(in_count)
+        stats_se = s.stats_se.at[s.lvl].set(scanned)
+        return _State(
+            new_parent, nxt, visited, new_level, s.lvl + 1, direction,
+            stats_dir, stats_fs, stats_se,
+        )
+
+    init = _State(
+        parent_ext, frontier, visited, level,
+        jnp.int32(0), TOP_DOWN,
+        jnp.full((max_levels,), -1, jnp.int32),
+        jnp.zeros((max_levels,), jnp.int32),
+        jnp.zeros((max_levels,), jnp.int32),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    parent = jnp.where(s.parent_ext[:v] == v, -1, s.parent_ext[:v])
+    return BFSResult(
+        parent=parent,
+        level=s.level,
+        stats=BFSStats(s.stats_dir, s.stats_fs, s.stats_se, s.lvl),
+    )
+
+
+def hybrid_bfs(
+    ev: EdgeView,
+    degree: jax.Array,
+    root: int | jax.Array,
+    *,
+    core: HeavyCore | None = None,
+    engine: str = "reference",
+    alpha: float = 14.0,
+    beta: float = 24.0,
+    max_levels: int = MAX_LEVELS,
+) -> BFSResult:
+    """Run one hybrid BFS from ``root``. ``engine in {reference, bitmap}``."""
+    if engine not in ("reference", "bitmap"):
+        raise ValueError(f"unknown engine {engine!r}")
+    n_active = jnp.sum(degree > 0).astype(jnp.int32)
+    use_core = engine == "bitmap" and core is not None
+    root = jnp.asarray(root, jnp.int32)
+    return _run(
+        ev, degree, n_active, root, core if use_core else None,
+        engine=engine, alpha=alpha, beta=beta,
+        use_core=use_core, max_levels=max_levels,
+    )

@@ -1,0 +1,98 @@
+"""End-to-end Graph500 pipeline (steps 1-4) with the paper's option ladder.
+
+The four rungs of Fig. 18, as config knobs:
+
+  reference-3.0.0  : no sort, no core, reference engine
+  TH-2             : degree sort (T2a), reference engine
+  K                : degree sort + hybrid switch tuning
+  Pre-G500         : degree sort + heavy core (T2b) + bitmap/Pallas engine
+                     (T1) [+ monitor comm (T3) in the distributed runner]
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import kronecker
+from repro.core.bfs_steps import EdgeView, edge_view
+from repro.core.graph_build import build_csr
+from repro.core.heavy import HeavyCore, build_heavy_core
+from repro.core.reorder import Reordering, degree_reorder, relabel_edges
+from repro.core.teps import Graph500Run, run_graph500
+
+
+@dataclass(frozen=True)
+class Graph500Config:
+    scale: int = 12
+    edge_factor: int = 16
+    seed: int = 42
+    n_roots: int = 8
+    degree_sort: bool = True
+    heavy_threshold: Optional[int] = 100   # None disables the dense core
+    engine: str = "bitmap"                 # "reference" | "bitmap"
+    alpha: float = 14.0
+    beta: float = 24.0
+
+    @staticmethod
+    def ladder(rung: str, **kw) -> "Graph500Config":
+        presets = {
+            "reference-3.0.0": dict(degree_sort=False, heavy_threshold=None,
+                                    engine="reference"),
+            "th2": dict(degree_sort=True, heavy_threshold=None,
+                        engine="reference"),
+            "k": dict(degree_sort=True, heavy_threshold=None,
+                      engine="reference", alpha=8.0, beta=64.0),
+            "pre-g500": dict(degree_sort=True, heavy_threshold=100,
+                             engine="bitmap"),
+        }
+        return Graph500Config(**{**presets[rung], **kw})
+
+
+@dataclass
+class BuiltGraph:
+    ev: EdgeView
+    degree: jnp.ndarray
+    core: Optional[HeavyCore]
+    reorder: Optional[Reordering]
+    construction_s: float
+    n_vertices: int
+    nnz: int
+
+
+def build(cfg: Graph500Config) -> BuiltGraph:
+    """Steps 1-2 (untimed for TEPS, but we record construction time)."""
+    t0 = time.perf_counter()
+    edges = kronecker.generate_edges(cfg.seed, cfg.scale, cfg.edge_factor)
+    g = build_csr(edges)
+    reord = None
+    if cfg.degree_sort:
+        reord = degree_reorder(g.degree)
+        edges = relabel_edges(edges, reord)
+        g = build_csr(edges)
+    core = None
+    if cfg.heavy_threshold is not None:
+        core = build_heavy_core(g, threshold=cfg.heavy_threshold)
+    ev = edge_view(g)
+    ev.src.block_until_ready()
+    return BuiltGraph(
+        ev=ev, degree=g.degree, core=core, reorder=reord,
+        construction_s=time.perf_counter() - t0,
+        n_vertices=g.num_vertices, nnz=int(g.nnz),
+    )
+
+
+def run(cfg: Graph500Config, built: BuiltGraph | None = None) -> tuple[BuiltGraph, Graph500Run]:
+    built = built or build(cfg)
+    edges = kronecker.generate_edges(cfg.seed, cfg.scale, cfg.edge_factor)
+    roots = kronecker.sample_roots(cfg.seed, edges, cfg.n_roots)
+    if built.reorder is not None:
+        roots = built.reorder.new_from_old[roots]
+    result = run_graph500(
+        built.ev, built.degree, roots,
+        core=built.core, engine=cfg.engine,
+        alpha=cfg.alpha, beta=cfg.beta,
+    )
+    return built, result

@@ -1,0 +1,155 @@
+"""Paper technique T2a: degree-descending vertex relabeling + isolated pruning.
+
+"we expect to sort vertices according to the degree, and assign ID 0 to the
+vertex with the highest [degree], so as to re-assign a new ID to other
+vertices and generate a mapping between new and old IDs" (§4.2).
+
+The relabeled graph has three key properties exploited downstream:
+  1. the heavy prefix ``[0, K)`` is contiguous — its frontier/visited bits
+     are a dense, cache-resident (paper: 2 MB/node) bitmap (``heavy.py``);
+  2. isolated vertices (~50% for Kronecker, Fig. 7) occupy a contiguous
+     tail and are excluded from traversal entirely;
+  3. round-robin ownership ``owner(v) = v % P`` (paper eq. (3):
+     ``nid = [oid, size] + rank``) spreads heavy vertices evenly across
+     ranks — load balance for free.
+
+Sorting backends: the paper ablates merge/quick/bubble host sorts (Fig. 12).
+``jnp.argsort`` on TPU/XLA:CPU is the production path; ``sort_host``
+re-implements the three classical algorithms for the fidelity benchmark.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_build import CSRGraph, build_csr, _build
+from repro.core.kronecker import EdgeList
+
+
+class Reordering(NamedTuple):
+    new_from_old: jax.Array   # [V] int32: old id -> new id
+    old_from_new: jax.Array   # [V] int32: new id -> old id
+    n_active: jax.Array       # [] int32: vertices with degree > 0
+    degree_sorted: jax.Array  # [V] int32: degree in new-id order (desc)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def degree_reorder(degree: jax.Array) -> Reordering:
+    """Stable degree-descending permutation (ties broken by old id)."""
+    v = degree.shape[0]
+    # argsort ascending on (-degree, old_id): stable by construction.
+    old_from_new = jnp.argsort(-degree, stable=True).astype(jnp.int32)
+    new_from_old = jnp.zeros((v,), jnp.int32).at[old_from_new].set(
+        jnp.arange(v, dtype=jnp.int32)
+    )
+    degree_sorted = degree[old_from_new]
+    n_active = jnp.sum(degree > 0).astype(jnp.int32)
+    return Reordering(new_from_old, old_from_new, n_active, degree_sorted)
+
+
+def relabel_edges(edges: EdgeList, r: Reordering) -> EdgeList:
+    return EdgeList(
+        src=r.new_from_old[edges.src],
+        dst=r.new_from_old[edges.dst],
+        num_vertices=edges.num_vertices,
+    )
+
+
+def reorder_graph(edges: EdgeList) -> tuple[CSRGraph, Reordering, EdgeList]:
+    """Build -> measure degrees -> relabel -> rebuild. Returns the sorted CSR."""
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)
+    e1 = relabel_edges(edges, r)
+    g1 = build_csr(e1)
+    return g1, r, e1
+
+
+# ---------------------------------------------------------------------------
+# Host-side classical sorts (paper Fig. 12 ablation). Production never calls
+# these; the benchmark compares their wall time + the resulting (identical)
+# permutation against jnp.argsort.
+# ---------------------------------------------------------------------------
+
+def _merge_sort_perm(keys: np.ndarray) -> np.ndarray:
+    n = len(keys)
+    perm = np.arange(n)
+    width = 1
+    buf = perm.copy()
+    while width < n:
+        for lo in range(0, n, 2 * width):
+            mid = min(lo + width, n)
+            hi = min(lo + 2 * width, n)
+            li, ri, k = lo, mid, lo
+            while li < mid and ri < hi:
+                # stable: <= keeps left element first on ties
+                if keys[perm[li]] <= keys[perm[ri]]:
+                    buf[k] = perm[li]; li += 1
+                else:
+                    buf[k] = perm[ri]; ri += 1
+                k += 1
+            while li < mid:
+                buf[k] = perm[li]; li += 1; k += 1
+            while ri < hi:
+                buf[k] = perm[ri]; ri += 1; k += 1
+        perm, buf = buf, perm
+        width *= 2
+    return perm
+
+
+def _quick_sort_perm(keys: np.ndarray) -> np.ndarray:
+    # iterative 3-way quicksort on (key, idx) pairs for stability
+    pairs = list(zip(keys.tolist(), range(len(keys))))
+    stack = [(0, len(pairs) - 1)]
+    while stack:
+        lo, hi = stack.pop()
+        if lo >= hi:
+            continue
+        pivot = pairs[(lo + hi) // 2]
+        i, j = lo, hi
+        while i <= j:
+            while pairs[i] < pivot:
+                i += 1
+            while pairs[j] > pivot:
+                j -= 1
+            if i <= j:
+                pairs[i], pairs[j] = pairs[j], pairs[i]
+                i += 1; j -= 1
+        stack.append((lo, j))
+        stack.append((i, hi))
+    return np.array([p[1] for p in pairs], dtype=np.int64)
+
+
+def _bubble_sort_perm(keys: np.ndarray) -> np.ndarray:
+    keys = keys.copy()
+    perm = np.arange(len(keys))
+    n = len(keys)
+    for i in range(n):
+        swapped = False
+        for j in range(n - 1 - i):
+            if keys[j] > keys[j + 1]:
+                keys[j], keys[j + 1] = keys[j + 1], keys[j]
+                perm[j], perm[j + 1] = perm[j + 1], perm[j]
+                swapped = True
+        if not swapped:
+            break
+    return perm
+
+
+_HOST_SORTS = {
+    "merge": _merge_sort_perm,
+    "quick": _quick_sort_perm,
+    "bubble": _bubble_sort_perm,
+}
+
+
+def sort_host(degree: np.ndarray, algorithm: str) -> np.ndarray:
+    """Degree-descending permutation via a classical host sort (Fig. 12)."""
+    if algorithm == "xla":
+        return np.asarray(jnp.argsort(-jnp.asarray(degree), stable=True))
+    fn = _HOST_SORTS[algorithm]
+    # sort ascending on key = (-degree, id) encoded: stable sorts only need -degree
+    return fn(-degree.astype(np.int64))

@@ -1,0 +1,86 @@
+"""Graph500 TEPS accounting (spec §Output) + the timed 64-root harness.
+
+``m`` counts undirected input edges inside the traversed component —
+computed as half the visited-degree sum over the *deduped* symmetric
+structure (divergence from the reference, which counts multiplicity;
+noted in DESIGN.md §8 — multiplicities are generator noise, not traversal
+work).
+
+Per the spec the headline figure is the **harmonic mean** TEPS across the
+64 search keys.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bfs_steps import EdgeView
+from repro.core.hybrid_bfs import BFSResult, hybrid_bfs
+from repro.core.validate import validate
+
+
+def traversed_edges(degree: jax.Array, result: BFSResult) -> jax.Array:
+    visited = result.parent >= 0
+    return jnp.sum(jnp.where(visited, degree, 0)) // 2
+
+
+@dataclass
+class Graph500Run:
+    teps: list[float] = field(default_factory=list)
+    times_s: list[float] = field(default_factory=list)
+    edges: list[int] = field(default_factory=list)
+    validated: list[bool] = field(default_factory=list)
+
+    @property
+    def harmonic_mean_teps(self) -> float:
+        t = np.asarray(self.teps)
+        t = t[t > 0]
+        return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
+
+    @property
+    def mean_time_s(self) -> float:
+        return float(np.mean(self.times_s)) if self.times_s else 0.0
+
+    @property
+    def all_valid(self) -> bool:
+        return all(self.validated) if self.validated else False
+
+
+def run_graph500(
+    ev: EdgeView,
+    degree: jax.Array,
+    roots,
+    *,
+    core=None,
+    engine: str = "reference",
+    alpha: float = 14.0,
+    beta: float = 24.0,
+    do_validate: bool = True,
+    warmup: bool = True,
+) -> Graph500Run:
+    """Timed BFS over the given roots (Graph500 step 3 + 4)."""
+    run = Graph500Run()
+    roots = np.asarray(roots)
+    if warmup and len(roots):
+        # compile outside the timed region, per spec (construction untimed)
+        hybrid_bfs(ev, degree, int(roots[0]), core=core, engine=engine,
+                   alpha=alpha, beta=beta).parent.block_until_ready()
+    for r in roots:
+        t0 = time.perf_counter()
+        res = hybrid_bfs(ev, degree, int(r), core=core, engine=engine,
+                         alpha=alpha, beta=beta)
+        res.parent.block_until_ready()
+        dt = time.perf_counter() - t0
+        m = int(traversed_edges(degree, res))
+        run.times_s.append(dt)
+        run.edges.append(m)
+        run.teps.append(m / dt if dt > 0 else 0.0)
+        if do_validate:
+            run.validated.append(bool(validate(ev, res, jnp.int32(int(r))).ok))
+        else:
+            run.validated.append(True)
+    return run

@@ -1,0 +1,75 @@
+"""Graph500 step 4: BFS tree validation (spec §Validation, 5 checks).
+
+Checks (all vectorized, no host loops):
+  V1. parent[root] == root, level[root] == 0.
+  V2. every visited non-root vertex has a visited parent and
+      level[v] == level[parent[v]] + 1  (no cycles, correct depths).
+  V3. every tree edge (v, parent[v]) exists in the input graph.
+  V4. every graph edge spans levels differing by at most 1.
+  V5. both endpoints of every edge are visited iff either is
+      (component-consistency: the traversal covered the root's component).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfs_steps import EdgeView
+from repro.core.hybrid_bfs import BFSResult
+
+
+class Validation(NamedTuple):
+    ok: jax.Array          # [] bool
+    root_ok: jax.Array
+    depth_ok: jax.Array
+    tree_edge_ok: jax.Array
+    edge_level_ok: jax.Array
+    component_ok: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=())
+def validate(ev: EdgeView, result: BFSResult, root: jax.Array) -> Validation:
+    v = ev.num_vertices
+    parent, level = result.parent, result.level
+    visited = parent >= 0
+
+    root_ok = (parent[root] == root) & (level[root] == 0)
+
+    p_safe = jnp.where(visited, parent, 0)
+    is_root = jnp.arange(v) == root
+    depth_ok = jnp.all(
+        jnp.where(
+            visited & ~is_root,
+            (parent >= 0)
+            & (parent < v)
+            & (level == level[p_safe] + 1)
+            & (parent != jnp.arange(v)),
+            True,
+        )
+    )
+
+    # V3: tree edges must exist — scatter formulation (no 64-bit keys):
+    # an edge (s, d) "witnesses" vertex s's tree edge when d == parent[s].
+    p_ext = jnp.concatenate([p_safe, jnp.full((1,), -7, jnp.int32)])
+    witness = ev.valid & (p_ext[ev.src] == ev.dst)
+    has_tree_edge = jax.ops.segment_max(
+        witness.astype(jnp.int32), ev.src, num_segments=v + 1
+    )[:v].astype(bool)
+    tree_edge_ok = jnp.all(jnp.where(visited & ~is_root, has_tree_edge, True))
+
+    lvl_ext = jnp.concatenate([level, jnp.full((1,), -1, jnp.int32)])
+    ls, ld = lvl_ext[ev.src], lvl_ext[ev.dst]
+    edge_level_ok = jnp.all(
+        jnp.where(ev.valid & (ls >= 0) & (ld >= 0), jnp.abs(ls - ld) <= 1, True)
+    )
+
+    vis_ext = jnp.concatenate([visited, jnp.zeros((1,), bool)])
+    component_ok = jnp.all(
+        jnp.where(ev.valid, vis_ext[ev.src] == vis_ext[ev.dst], True)
+    )
+
+    ok = root_ok & depth_ok & tree_edge_ok & edge_level_ok & component_ok
+    return Validation(ok, root_ok, depth_ok, tree_edge_ok, edge_level_ok, component_ok)

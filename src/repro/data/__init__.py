@@ -1,0 +1,3 @@
+from repro.data import graphs, sampler, synthetic
+
+__all__ = ["graphs", "sampler", "synthetic"]

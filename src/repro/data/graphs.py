@@ -1,0 +1,135 @@
+"""Graph datasets for the GNN shape cells (synthetic, Kronecker-powered).
+
+The Graph500 Kronecker generator (repro.core) doubles as the power-law
+graph source for GNN training — the same degree-sort relabeling (T2) is
+applied so heavy vertices are contiguous, which the locality benchmarks
+exploit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_edges, build_csr
+from repro.core.graph_build import csr_to_edge_arrays
+from repro.core.reorder import degree_reorder, relabel_edges
+from repro.models.gnn import Graph
+
+
+def make_feature_graph(
+    seed: int,
+    scale: int,
+    d_feat: int,
+    n_classes: int = 8,
+    edge_factor: int = 8,
+    degree_sort: bool = True,
+    with_edge_vec: bool = False,
+) -> tuple[Graph, jax.Array]:
+    """Kronecker graph + gaussian class-conditioned features + labels."""
+    edges = generate_edges(seed, scale, edge_factor)
+    g = build_csr(edges)
+    if degree_sort:
+        r = degree_reorder(g.degree)
+        edges = relabel_edges(edges, r)
+        g = build_csr(edges)
+    src, dst, valid = csr_to_edge_arrays(g)
+    n = g.num_vertices
+    key = jax.random.PRNGKey(seed + 1)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    labels = jax.random.randint(k1, (n,), 0, n_classes)
+    centers = jax.random.normal(k2, (n_classes, d_feat))
+    feat = centers[labels] + 0.5 * jax.random.normal(k3, (n, d_feat))
+    ev = None
+    if with_edge_vec:
+        ev = jax.random.normal(k4, (src.shape[0], 3))
+    graph = Graph(node_feat=feat.astype(jnp.float32),
+                  edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+                  edge_valid=jnp.asarray(valid), n_nodes=n, edge_vec=ev)
+    return graph, labels
+
+
+def make_molecule_batch(
+    seed: int, n_mols: int, nodes_per_mol: int, edges_per_mol: int,
+    n_species: int = 16,
+) -> tuple[Graph, jax.Array, dict]:
+    """Batched small molecular graphs (random geometric) + triplet lists.
+
+    Returns (graph with graph_ids, species, triplets dict for DimeNet).
+    """
+    rng = np.random.default_rng(seed)
+    n = n_mols * nodes_per_mol
+    e = n_mols * edges_per_mol
+    pos = rng.normal(size=(n_mols, nodes_per_mol, 3)) * 1.5
+    src = np.empty(e, np.int32)
+    dst = np.empty(e, np.int32)
+    vec = np.empty((e, 3), np.float32)
+    for m in range(n_mols):
+        # connect nearest neighbors until edges_per_mol directed edges
+        d = np.linalg.norm(pos[m][:, None] - pos[m][None], axis=-1)
+        np.fill_diagonal(d, np.inf)
+        order = np.argsort(d, axis=1)
+        cnt = 0
+        k = 0
+        while cnt < edges_per_mol:
+            for i in range(nodes_per_mol):
+                if cnt >= edges_per_mol:
+                    break
+                j = order[i, k % (nodes_per_mol - 1)]
+                idx = m * edges_per_mol + cnt
+                src[idx] = m * nodes_per_mol + i
+                dst[idx] = m * nodes_per_mol + j
+                vec[idx] = pos[m, j] - pos[m, i]
+                cnt += 1
+            k += 1
+    species = rng.integers(0, n_species, size=n).astype(np.int32)
+    graph_ids = np.repeat(np.arange(n_mols, dtype=np.int32), nodes_per_mol)
+    graph = Graph(
+        node_feat=jnp.zeros((n, 1), jnp.float32),
+        edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+        edge_valid=jnp.ones((e,), bool), n_nodes=n,
+        edge_vec=jnp.asarray(vec), graph_ids=jnp.asarray(graph_ids),
+    )
+    triplets = build_triplets(src, dst, vec, max_triplets=e * 8)
+    return graph, jnp.asarray(species), triplets
+
+
+def build_triplets(src: np.ndarray, dst: np.ndarray, vec: np.ndarray,
+                   max_triplets: int) -> dict:
+    """DimeNet triplet lists: pairs of edges (k->j, j->i), k != i.
+
+    angle[t] = angle between vec(j->k reversed) and vec(j->i) at pivot j.
+    Static-size output: padded with valid=False.
+    """
+    e = len(src)
+    by_src: dict[int, list[int]] = {}
+    for eid in range(e):
+        by_src.setdefault(int(src[eid]), []).append(eid)
+    t_in, t_out, ang = [], [], []
+    for e_out in range(e):  # edge j -> i
+        j, i = int(src[e_out]), int(dst[e_out])
+        for e_in in by_src.get(j, []):  # edge j -> k reversed means k -> j;
+            k = int(dst[e_in])
+            if k == i or e_in == e_out:
+                continue
+            # incoming edge to j is (k -> j): use reverse of (j -> k)
+            v1 = -vec[e_in]
+            v2 = vec[e_out]
+            cos = float(np.dot(v1, v2) /
+                        (np.linalg.norm(v1) * np.linalg.norm(v2) + 1e-9))
+            t_in.append(e_in)
+            t_out.append(e_out)
+            ang.append(np.arccos(np.clip(cos, -1, 1)))
+            if len(t_in) >= max_triplets:
+                break
+        if len(t_in) >= max_triplets:
+            break
+    pad = max_triplets - len(t_in)
+    valid = np.array([True] * len(t_in) + [False] * pad)
+    t_in = np.array(t_in + [0] * pad, np.int32)
+    t_out = np.array(t_out + [0] * pad, np.int32)
+    ang = np.array(ang + [0.0] * pad, np.float32)
+    return {"t_in": jnp.asarray(t_in), "t_out": jnp.asarray(t_out),
+            "angle": jnp.asarray(ang), "valid": jnp.asarray(valid)}

@@ -1,0 +1,31 @@
+"""Deterministic synthetic data streams (seeded; infinite; no I/O).
+
+Every batch is a pure function of (seed, step) — restart-safe by
+construction, which the checkpoint/resume integration test relies on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int):
+    """Zipf-ish token stream: realistic id skew for embedding/vocab paths."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    u = jax.random.uniform(key, (batch, seq + 1), minval=1e-6, maxval=1.0)
+    # inverse-CDF of a truncated zipf(1.1)
+    ids = jnp.clip((u ** (-1 / 1.1) - 1.0).astype(jnp.int32), 0, vocab - 1)
+    return {"tokens": ids[:, :-1], "labels": ids[:, 1:]}
+
+
+def recsys_batch(seed: int, step: int, batch: int, n_fields: int,
+                 rows_per_field: int):
+    """Power-law categorical ids per field + Bernoulli labels.
+
+    Low ids are hot (the heavy-vertex analogy is literal here)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 7), step)
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (batch, n_fields), minval=1e-6, maxval=1.0)
+    ids = jnp.clip((u ** (-1.2) - 1.0).astype(jnp.int32), 0, rows_per_field - 1)
+    labels = jax.random.bernoulli(k2, 0.25, (batch,)).astype(jnp.float32)
+    return {"ids": ids, "labels": labels}

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+exposes the jit'd public wrappers.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

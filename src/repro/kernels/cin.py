@@ -1,0 +1,75 @@
+"""Pallas kernel: fused xDeepFM CIN layer (Compressed Interaction Network).
+
+xDeepFM's CIN layer materializes, per batch row, the outer product
+``x0[i,d] * xl[j,d]`` ([F0, Fl, D]) and compresses it with H filters —
+naively an ``O(B * F0 * Fl * D)`` intermediate that blows HBM at the
+``train_batch = 65536`` cell (65536*39*200*10 fp32 = 20 GiB). The fused
+kernel never materializes the outer product: per (batch-tile, d-lane) it
+computes
+
+    out[b, h, d] = sum_ij w[h, i, j] * x0[b, i, d] * xl[b, j, d]
+                 = sum_i x0[b, i, d] * (w[h, i, :] @ xl[b, :, d])
+
+as two small matmuls in VMEM — the same "buffer the heavy intermediate"
+philosophy as the paper's T2 applied to a recsys hot spot.
+
+Shapes: x0 [B, F0, D], xl [B, Fl, D], w [H, F0*Fl] -> out [B, H, D].
+B must divide by the batch tile; D is the lane axis (padded to 128 by the
+wrapper in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(f0: int, fl: int, h: int):
+    def kernel(x0_ref, xl_ref, w_ref, out_ref):
+        x0 = x0_ref[...]            # [BT, F0, D]
+        xl = xl_ref[...]            # [BT, Fl, D]
+        w = w_ref[...].reshape(h, f0, fl)
+        # t[b, h, i, d] = sum_j w[h, i, j] * xl[b, j, d]
+        t = jax.lax.dot_general(
+            w.reshape(h * f0, fl), xl,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                            # [H*F0, BT, D]
+        bt, d = xl.shape[0], xl.shape[2]
+        t = t.reshape(h, f0, bt, d)
+        # out[b, h, d] = sum_i x0[b, i, d] * t[h, i, b, d]
+        out = jnp.sum(t * x0.transpose(1, 0, 2)[None], axis=1)  # [H, BT, D]
+        out_ref[...] = out.transpose(1, 0, 2).astype(out_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def cin_layer(
+    x0: jax.Array,   # [B, F0, D]
+    xl: jax.Array,   # [B, Fl, D]
+    w: jax.Array,    # [H, F0, Fl]
+    *,
+    batch_tile: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, f0, d = x0.shape
+    _, fl, _ = xl.shape
+    h = w.shape[0]
+    assert b % batch_tile == 0, (b, batch_tile)
+    grid = (b // batch_tile,)
+    w2 = w.reshape(h, f0 * fl)
+    return pl.pallas_call(
+        _make_kernel(f0, fl, h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch_tile, f0, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((batch_tile, fl, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((h, f0 * fl), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_tile, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), x0.dtype),
+        interpret=interpret,
+    )(x0, xl, w2)

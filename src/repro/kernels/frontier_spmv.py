@@ -1,0 +1,85 @@
+"""Pallas kernel: bottom-up BFS step over the dense heavy-vertex core.
+
+Paper §4.1/§4.2 adaptation (DESIGN.md §2): after degree sorting, the K
+heaviest vertices form a near-dense adjacency corner stored as a packed
+uint32 bitmap ``A_core [K, K/32]``. One bottom-up level restricted to the
+core is, per row i (an unvisited core vertex):
+
+    find min j such that A_core[i, j] & frontier[j]    (else BIG)
+
+i.e. a Boolean-semiring mat-vec with argmin-bit extraction. The paper's
+SVE loop gathers neighbor words and tests frontier membership 16-32 lanes
+at a time with early exit; the TPU VPU version scans a (ROWS, 128)-word
+tile per op (4096 columns' worth of bits) with *no* early exit — branchless
+throughput replaces the CPU's latency trick (hardware-adaptation note in
+DESIGN.md §2, "AVLS ≙ hand-tuned BlockSpec").
+
+Grid: (K / ROWS, W / LANES); the word axis is innermost so the output
+row-tile accumulates a running min across word tiles (revisited output
+block — the canonical Pallas accumulation pattern).
+
+The row-block shape is the kernel's "vector length": ``rows_per_tile`` is
+the AVLA/AVLS tuning knob benchmarked in benchmarks/bfs_single.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BIG = 2**30  # python int: safe to close over inside the kernel
+
+
+def _make_kernel(lanes: int):
+    def kernel(a_ref, f_ref, out_ref):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, BIG)
+
+        hits = a_ref[...] & f_ref[...]              # [ROWS, LANES] uint32
+        # ctz via SWAR popcount of (lowbit - 1)
+        low = hits & (~hits + jnp.uint32(1))
+        m = low - jnp.uint32(1)
+        m = m - ((m >> 1) & jnp.uint32(0x55555555))
+        m = (m & jnp.uint32(0x33333333)) + ((m >> 2) & jnp.uint32(0x33333333))
+        m = (m + (m >> 4)) & jnp.uint32(0x0F0F0F0F)
+        ctz = ((m * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+        word_base = (j * lanes + jax.lax.broadcasted_iota(jnp.int32, hits.shape, 1)) * 32
+        cand = jnp.where(hits != 0, word_base + ctz, BIG)
+        row_min = jnp.min(cand, axis=1, keepdims=True)   # [ROWS, 1]
+        out_ref[...] = jnp.minimum(out_ref[...], row_min)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_tile", "lanes", "interpret"))
+def core_spmv(
+    a_core: jax.Array,        # uint32 [K, W], W = K // 32
+    frontier_bm: jax.Array,   # uint32 [W]
+    *,
+    rows_per_tile: int = 8,
+    lanes: int = LANES,
+    interpret: bool = True,
+) -> jax.Array:
+    """Min frontier-neighbor id per core row (BIG when none). -> int32 [K]."""
+    k, w = a_core.shape
+    assert k % rows_per_tile == 0 and w % lanes == 0, (k, w, rows_per_tile, lanes)
+    grid = (k // rows_per_tile, w // lanes)
+    f2 = frontier_bm.reshape(1, w)
+    out = pl.pallas_call(
+        _make_kernel(lanes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_tile, lanes), lambda i, j: (i, j)),
+            pl.BlockSpec((1, lanes), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_tile, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.int32),
+        interpret=interpret,
+    )(a_core, f2)
+    return out[:, 0]

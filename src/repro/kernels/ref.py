@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (assert_allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.int32(2**30)
+
+
+def popcount_u32(w: jax.Array) -> jax.Array:
+    """SWAR popcount on uint32 arrays."""
+    w = w.astype(jnp.uint32)
+    w = w - ((w >> 1) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
+    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((w * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def ctz_u32(w: jax.Array) -> jax.Array:
+    """Count trailing zeros; returns 32 for w == 0."""
+    w = w.astype(jnp.uint32)
+    low = w & (~w + jnp.uint32(1))  # isolate lowest set bit (0 if w == 0)
+    return jnp.where(w == 0, jnp.int32(32), popcount_u32(low - jnp.uint32(1)))
+
+
+def frontier_update_ref(next_raw: jax.Array, visited: jax.Array):
+    """Fused frontier update oracle.
+
+    next = next_raw & ~visited;  visited |= next;  count = popcount(next).
+    Shapes: uint32 [W] -> (uint32 [W], uint32 [W], int32 scalar).
+    """
+    nxt = next_raw & ~visited
+    vis = visited | nxt
+    count = jnp.sum(popcount_u32(nxt))
+    return nxt, vis, count
+
+
+def core_spmv_ref(a_core: jax.Array, frontier_bm: jax.Array) -> jax.Array:
+    """Bottom-up dense-core step oracle.
+
+    For each core row i: the minimum column j with A[i,j] & frontier[j],
+    or BIG when no frontier neighbor exists. a_core: uint32 [K, W],
+    frontier_bm: uint32 [W]; returns int32 [K].
+    """
+    k, w = a_core.shape
+    hits = a_core & frontier_bm[None, :]                       # [K, W]
+    word_idx = jnp.arange(w, dtype=jnp.int32) * 32             # [W]
+    cand = jnp.where(hits != 0, word_idx[None, :] + ctz_u32(hits), BIG)
+    return jnp.min(cand, axis=1).astype(jnp.int32)
+
+
+def spmv_mxu_ref(a_core8: jax.Array, frontier8: jax.Array) -> jax.Array:
+    """Multi-source Boolean SpMV oracle (MXU formulation).
+
+    a_core8: int8 [K, K]; frontier8: int8 [K, R] -> int32 [K, R] counts
+    (callers threshold > 0 for the next-frontier bits).
+    """
+    return jax.lax.dot_general(
+        a_core8, frontier8,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def cin_layer_ref(x0: jax.Array, xl: jax.Array, w: jax.Array) -> jax.Array:
+    """xDeepFM CIN layer oracle.
+
+    x0: [B, F0, D]  (base field embeddings)
+    xl: [B, Fl, D]  (previous CIN feature map)
+    w:  [H, F0, Fl] (compression filters)
+    out: [B, H, D]:  out[b,h,d] = sum_{i,j} w[h,i,j] * x0[b,i,d] * xl[b,j,d]
+    """
+    outer = jnp.einsum("bid,bjd->bijd", x0, xl)
+    return jnp.einsum("hij,bijd->bhd", w, outer)

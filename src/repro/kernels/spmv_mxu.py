@@ -1,0 +1,67 @@
+"""Pallas kernel: multi-source Boolean SpMV on the MXU (beyond-paper).
+
+Graph500 evaluates 64 BFS roots sequentially. A TPU-native acceleration the
+paper could not express on Matrix-2000+: batch R roots into one int8
+matmul per level over the dense heavy core,
+
+    counts[K, R] = A_core8[K, K] @ frontiers8[K, R]   (int32 accumulate)
+    next[K, R]   = counts > 0
+
+turning the Boolean semiring into MXU work at 128x128x128 tiles. For the
+core (K up to 2**16) this replaces R VPU scans with one systolic pass —
+the §Perf hillclimb for the graph500 cells quantifies the trade
+(see EXPERIMENTS.md).
+
+Standard 3-D-grid accumulation matmul; K and R must be multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _kernel(a_ref, f_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        a_ref[...], f_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k", "interpret"))
+def spmv_mxu(
+    a_core8: jax.Array,    # int8 [K, K]
+    frontier8: jax.Array,  # int8 [K, R]
+    *,
+    tile_m: int = TILE,
+    tile_n: int = TILE,
+    tile_k: int = TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """int32 [K, R] neighbor counts for R simultaneous BFS frontiers."""
+    k, _ = a_core8.shape
+    _, r = frontier8.shape
+    assert k % tile_m == 0 and k % tile_k == 0 and r % tile_n == 0, (k, r)
+    grid = (k // tile_m, r // tile_n, k // tile_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, r), jnp.int32),
+        interpret=interpret,
+    )(a_core8, frontier8)

@@ -1,0 +1,8 @@
+"""Launchers: production mesh, dry-run, training CLI.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — it sets
+XLA_FLAGS for 512 host devices at import time (by design, per spec).
+"""
+from repro.launch import mesh
+
+__all__ = ["mesh"]

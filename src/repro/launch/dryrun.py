@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything else follows.
+
+import argparse
+import json
+import math
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_cells, get
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.input_specs import build_cell
+
+OUT_ROOT = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def _compile_and_measure(plan, chips):
+    out = {}
+    t0 = time.perf_counter()
+    lowered = jax.jit(
+        plan.step,
+        in_shardings=plan.in_shardings,
+        out_shardings=plan.out_shardings,
+    ).lower(*plan.args)
+    out["lower_s"] = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    out["compile_s"] = time.perf_counter() - t1
+    ca = compiled.cost_analysis() or {}
+    out["flops"] = float(ca.get("flops", 0.0))
+    out["bytes"] = float(ca.get("bytes accessed", 0.0))
+    out["transcendentals"] = float(ca.get("transcendentals", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        }
+        out["hbm_per_device_bytes"] = (
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = repr(e)
+    cs = collective_stats(compiled.as_text(), chips)
+    out["collectives"] = cs.to_json()
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, variant: str = "baseline"):
+    """Lower + compile one (arch x shape x mesh) cell; return metrics dict.
+
+    LM cells get THREE compiles: the production scan form (the compile
+    proof + memory analysis) plus unrolled 1- and 2-layer probes whose
+    difference gives exact per-layer flops/bytes/collectives — XLA
+    cost_analysis counts while-loop bodies once, so scan-form costs
+    undercount by ~n_layers (verified; see EXPERIMENTS.md §Dry-run).
+    """
+    from repro.configs import get as get_spec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    plan = build_cell(arch, shape, mesh, variant)
+    family = get_spec(arch).family
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "skip_reason": plan.skip_reason, "supplementary": plan.supplementary,
+        "note": plan.note, "model_flops_global": plan.model_flops_global,
+        "family": family, "ok": False,
+    }
+
+    prod = _compile_and_measure(plan, chips)
+    rec.update({k: prod[k] for k in ("lower_s", "compile_s")})
+    rec["memory"] = prod.get("memory")
+    rec["hbm_per_device_bytes"] = prod.get("hbm_per_device_bytes")
+    rec["scan_raw"] = {k: prod.get(k) for k in ("flops", "bytes")}
+
+    if family == "lm":
+        n_layers = get_spec(arch).make_config().n_layers
+        p1 = _compile_and_measure(
+            build_cell(arch, shape, mesh, variant, n_layers_override=1,
+                       unroll=True), chips)
+        p2 = _compile_and_measure(
+            build_cell(arch, shape, mesh, variant, n_layers_override=2,
+                       unroll=True), chips)
+        rec["probe_compile_s"] = [p1["compile_s"], p2["compile_s"]]
+
+        def extrap(a, b):
+            return a + (n_layers - 1) * max(b - a, 0.0)
+
+        rec["flops_per_device"] = extrap(p1["flops"], p2["flops"])
+        rec["bytes_per_device"] = extrap(p1["bytes"], p2["bytes"])
+        c1, c2 = p1["collectives"], p2["collectives"]
+        link = extrap(c1["total_link_bytes"], c2["total_link_bytes"])
+        opnd = extrap(c1["total_operand_bytes"], c2["total_operand_bytes"])
+        rec["collectives"] = {
+            "probe1": c1, "probe2": c2,
+            "total_link_bytes": link, "total_operand_bytes": opnd,
+            "extrapolated": True, "n_layers": n_layers,
+        }
+        coll_link, coll_opnd = link, opnd
+    else:
+        rec["flops_per_device"] = prod["flops"]
+        rec["bytes_per_device"] = prod["bytes"]
+        rec["collectives"] = prod["collectives"]
+        coll_link = prod["collectives"]["total_link_bytes"]
+        coll_opnd = prod["collectives"]["total_operand_bytes"]
+        if family == "graph500":
+            rec["note"] = (rec["note"] + " | terms are per BFS level "
+                           "(while-loop body counted once)").strip(" |")
+
+    rec["roofline"] = {
+        "compute_s": rec["flops_per_device"] / mesh_lib.PEAK_FLOPS_BF16,
+        "memory_s": rec["bytes_per_device"] / mesh_lib.HBM_BW,
+        "collective_s": coll_link / mesh_lib.ICI_BW,
+        "collective_s_operand_metric": coll_opnd / mesh_lib.ICI_BW,
+    }
+    terms = rec["roofline"]
+    rec["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    if rec["flops_per_device"] > 0:
+        rec["model_flops_ratio"] = (
+            plan.model_flops_global / chips / rec["flops_per_device"])
+    rec["ok"] = True
+    return rec
+
+
+def out_path(arch, shape, multi_pod, variant):
+    mesh_name = "multipod" if multi_pod else "singlepod"
+    d = os.path.join(OUT_ROOT, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return os.path.join(d, f"{arch}__{shape}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every (arch x shape) cell in subprocesses")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    if args.sweep:
+        return sweep(args)
+
+    assert args.arch and args.shape, "--arch/--shape required (or --sweep)"
+    path = out_path(args.arch, args.shape, args.multi_pod, args.variant)
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.variant)
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "variant": args.variant, "ok": False,
+               "error": repr(e), "traceback": traceback.format_exc()}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if not args.quiet:
+        show = {k: rec.get(k) for k in
+                ("arch", "shape", "mesh", "ok", "skip_reason", "compile_s",
+                 "flops_per_device", "bytes_per_device", "bottleneck")}
+        print(json.dumps(show))
+        if rec.get("ok"):
+            print(json.dumps(rec["roofline"]))
+        else:
+            print(rec.get("error", ""), file=sys.stderr)
+    return 0 if rec.get("ok") or rec.get("skip_reason") else 1
+
+
+def sweep(args):
+    cells = [c for c in all_cells()]
+    jobs = []
+    for multi in ([False, True]):
+        for arch, shape in cells:
+            path = out_path(arch, shape, multi, args.variant)
+            if os.path.exists(path) and not args.force:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape,
+                   "--variant", args.variant, "--quiet"]
+            if multi:
+                cmd.append("--multi-pod")
+            jobs.append((arch, shape, multi, cmd))
+    print(f"[sweep] {len(jobs)} cells to run, {args.jobs} at a time")
+    procs = []
+    failed = []
+    idx = 0
+    while idx < len(jobs) or procs:
+        while idx < len(jobs) and len(procs) < args.jobs:
+            arch, shape, multi, cmd = jobs[idx]
+            p = subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                                 stderr=subprocess.PIPE)
+            procs.append((arch, shape, multi, p, time.time()))
+            idx += 1
+        time.sleep(2)
+        still = []
+        for arch, shape, multi, p, t0 in procs:
+            if p.poll() is None:
+                still.append((arch, shape, multi, p, t0))
+                continue
+            dt = time.time() - t0
+            tag = f"{arch}/{shape}/{'mp' if multi else 'sp'}"
+            if p.returncode == 0:
+                print(f"[sweep] OK   {tag} ({dt:.0f}s)")
+            else:
+                err = p.stderr.read().decode()[-400:]
+                print(f"[sweep] FAIL {tag} ({dt:.0f}s): {err}")
+                failed.append(tag)
+        procs = still
+    print(f"[sweep] done; {len(failed)} failures")
+    for f in failed:
+        print("  FAIL", f)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""Post-SPMD HLO analysis: collective byte census for the roofline.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+compiled HLO text (spec instruction) and sum bytes for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Reported per op:
+  * ``operand_bytes`` — the spec's metric (sum of operand sizes);
+  * ``link_bytes``    — ring-algorithm bytes actually crossing links per
+    device (what the collective roofline term should charge):
+      all-gather      (N-1)/N x output
+      reduce-scatter  (N-1)/N x operand
+      all-reduce      2 (N-1)/N x size
+      all-to-all      (N-1)/N x size
+      collective-permute  size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    operand_bytes: dict
+    link_bytes: dict
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+    @property
+    def total_link_bytes(self) -> float:
+        return float(sum(self.link_bytes.values()))
+
+    def to_json(self):
+        return {
+            "counts": dict(self.counts),
+            "operand_bytes": {k: float(v) for k, v in self.operand_bytes.items()},
+            "link_bytes": {k: float(v) for k, v in self.link_bytes.items()},
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_link_bytes": self.total_link_bytes,
+        }
+
+
+def collective_stats(hlo_text: str, total_devices: int) -> CollectiveStats:
+    counts = defaultdict(int)
+    operand = defaultdict(float)
+    link = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        out_bytes = _shape_bytes(out_shape)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = gm.group(1).count(",") + 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else total_devices
+        n = max(n, 1)
+        counts[kind] += 1
+        if kind == "all-gather":
+            op = out_bytes / n
+            lk = out_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            op = out_bytes * n
+            lk = op * (n - 1) / n
+        elif kind == "all-reduce":
+            op = out_bytes
+            lk = 2.0 * out_bytes * (n - 1) / n
+        elif kind == "all-to-all":
+            op = out_bytes
+            lk = out_bytes * (n - 1) / n
+        else:  # collective-permute
+            op = out_bytes
+            lk = out_bytes
+        operand[kind] += op
+        link[kind] += lk
+    return CollectiveStats(counts, operand, link)

@@ -1,0 +1,722 @@
+"""Per-(arch x shape) dry-run adapters: step fn + ShapeDtypeStruct inputs
++ in/out shardings + analytic MODEL_FLOPS.
+
+Everything here is shape-only — no device allocation (the 512-device
+dry-run lowers against these stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get
+from repro.configs.lm_archs import padded_vocab
+from repro.data.sampler import static_block_specs
+from repro.models import gnn, recsys, transformer as T
+from repro.models.gnn import Graph
+from repro.optim import AdamW, cosine
+from repro.train import train_step as TS
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    step: Callable
+    args: tuple              # ShapeDtypeStructs (pytrees)
+    in_shardings: Any
+    out_shardings: Any
+    model_flops_global: float
+    skip_reason: str | None = None
+    supplementary: bool = False
+    note: str = ""
+
+
+def _axes(mesh: Mesh):
+    multi = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi else ("data",)
+    return multi, batch_axes
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _shard_tree_like(mesh, tree, spec_fn):
+    return jax.tree.map(spec_fn, tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_policy(mesh: Mesh, *, remat=True, sequence_sharded=False,
+               unroll=False, variant="baseline"):
+    _, ba = _axes(mesh)
+    moe_mode = "dense"
+    if variant.startswith("local_tp"):
+        moe_mode = "local_tp"
+    elif variant.startswith("monitor_a2a"):
+        moe_mode = "monitor_a2a"
+    seq = sequence_sharded or variant in ("seq_sharded", "local_tp_sp",
+                                          "qchunk_sp", "seq_sharded_zero1")
+    q_chunk = 1024 if variant in ("qchunk", "qchunk_sp") else None
+    # unroll=True is used by the 1/2-layer cost PROBES: XLA cost_analysis
+    # counts while bodies once (verified undercount ~L x), so per-layer
+    # costs come from unrolled shallow probes; the production compile
+    # keeps the scan (small HLO, fast 512-way compile).
+    return T.ShardingPolicy(mesh=mesh, batch_axes=ba, model_axis="model",
+                            remat=remat, sequence_sharded=seq,
+                            unroll_layers=unroll, moe_mode=moe_mode,
+                            q_chunk=q_chunk)
+
+
+def _zero1_shardings(mesh, pshard, params_sds, data_axes):
+    """ZeRO-1: additionally shard optimizer moments over the data axes —
+    first unsharded dim divisible by the DP size takes them."""
+    dsz = math.prod(mesh.shape[a] for a in data_axes)
+    tag = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def f(ns, sds):
+        spec = list(ns.spec) + [None] * (len(sds.shape) - len(ns.spec))
+        for i, dim in enumerate(sds.shape):
+            if spec[i] is None and dim % dsz == 0 and dim > 0:
+                spec[i] = tag
+                return NamedSharding(mesh, P(*spec))
+        return ns
+
+    return jax.tree.map(f, pshard, params_sds)
+
+
+def _lm_param_state(cfg, mesh, policy, with_opt: bool, zero1: bool = False):
+    params_sds = jax.eval_shape(
+        lambda k: T.init_params(k, cfg), SDS((2,), jnp.uint32))
+    pshard = T.param_shardings(cfg, policy)
+    if not with_opt:
+        return params_sds, pshard, None, None
+    opt = AdamW(cosine(3e-4, 100, 10000))
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    mv = jax.tree.map(lambda s: s, pshard)
+    if zero1:
+        _, ba = _axes(mesh)
+        mv = _zero1_shardings(mesh, mv, params_sds, ba)
+    opt_shard = type(opt_sds)(_rep(mesh), mv, jax.tree.map(lambda s: s, mv))
+    return params_sds, pshard, (opt, opt_sds), opt_shard
+
+
+def lm_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline",
+            n_layers_override: int | None = None,
+            unroll: bool = False) -> CellPlan:
+    spec = get(arch)
+    cfg = padded_vocab(spec.make_config())
+    if n_layers_override is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+    cell = spec.shape(shape)
+    s, gb = cell.dims["seq_len"], cell.dims["global_batch"]
+    multi, ba = _axes(mesh)
+    rep = _rep(mesh)
+    supplementary = False
+    note = ""
+
+    if cell.kind == "train":
+        policy = _lm_policy(mesh, unroll=unroll, variant=variant)
+        params_sds, pshard, (opt, opt_sds), oshard = _lm_param_state(
+            cfg, mesh, policy, with_opt=True, zero1="zero1" in variant)
+        step = TS.make_lm_train_step(cfg, opt, policy)
+        batch = {"tokens": SDS((gb, s), jnp.int32),
+                 "labels": SDS((gb, s), jnp.int32)}
+        bshard = {"tokens": NamedSharding(mesh, P(ba, None)),
+                  "labels": NamedSharding(mesh, P(ba, None))}
+        flops = 6.0 * cfg.active_param_count() * gb * s
+        return CellPlan(arch, shape, step, (params_sds, opt_sds, batch),
+                        (pshard, oshard, bshard), (pshard, oshard, rep),
+                        flops)
+
+    if cell.kind == "prefill":
+        policy = _lm_policy(mesh, remat=False, unroll=unroll, variant=variant)
+        params_sds, pshard, _, _ = _lm_param_state(cfg, mesh, policy, False)
+        step = TS.make_lm_prefill(cfg, policy)
+        tokens = SDS((gb, s), jnp.int32)
+        tshard = NamedSharding(mesh, P(ba, None))
+        flops = 2.0 * cfg.active_param_count() * gb * s
+        return CellPlan(arch, shape, step, (params_sds, tokens),
+                        (pshard, tshard), NamedSharding(mesh, P(ba, None)),
+                        flops)
+
+    # decode cells
+    skip = None
+    wcfg = cfg
+    if shape == "long_500k":
+        # pure full-attention archs: official cell skipped; lower the
+        # beyond-spec sliding-window mode as a supplementary row.
+        skip = "SKIP(full-attn)"
+        wcfg = dataclasses.replace(cfg, window=8192)
+        supplementary = True
+        note = "supplementary sliding-window (8k) row; official cell skipped"
+    policy = _lm_policy(mesh, remat=False, unroll=unroll)
+    params_sds, pshard, _, _ = _lm_param_state(wcfg, mesh, policy, False)
+    step = TS.make_lm_serve_step(wcfg, policy)
+    shard_seq = (gb == 1) or (wcfg.n_kv_heads % 16 != 0)
+    cache_sds = jax.eval_shape(lambda: T.init_cache(wcfg, gb, s))
+    cshard = T.cache_shardings(wcfg, policy, shard_seq=shard_seq)
+    if gb == 1:
+        # batch unshardable: KV sequence shards over every non-model axis too
+        cshard = {k: NamedSharding(mesh, P(None, None, tuple(ba) + ("model",), None, None))
+                  for k in ("k", "v")}
+    tokens = SDS((gb, 1), jnp.int32)
+    tshard = NamedSharding(mesh, P(ba if gb > 1 else None, None))
+    pos = SDS((), jnp.int32)
+    flops = 2.0 * wcfg.active_param_count() * gb
+    return CellPlan(arch, shape, step,
+                    (params_sds, cache_sds, tokens, pos),
+                    (pshard, cshard, tshard, rep),
+                    (tshard, cshard), flops,
+                    skip_reason=skip, supplementary=supplementary, note=note)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _graph_sds(n: int, e: int, d: int, with_vec: bool, n_devices: int):
+    n = _pad_to(n, n_devices)
+    e = _pad_to(e, n_devices)
+    return Graph(
+        node_feat=SDS((n, d), jnp.float32),
+        edge_src=SDS((e,), jnp.int32),
+        edge_dst=SDS((e,), jnp.int32),
+        edge_valid=SDS((e,), jnp.bool_),
+        n_nodes=n,
+        edge_vec=SDS((e, 3), jnp.float32) if with_vec else None,
+        graph_ids=None,
+    ), n, e
+
+
+def gnn_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") -> CellPlan:
+    spec = get(arch)
+    cell = spec.shape(shape)
+    multi, ba = _axes(mesh)
+    nd = math.prod(mesh.devices.shape)
+    all_axes = tuple(mesh.axis_names)
+    rep = _rep(mesh)
+    shard0 = NamedSharding(mesh, P(all_axes))          # dim0 over every axis
+    opt = AdamW(cosine(1e-3, 10, 1000))
+    geo = arch in ("dimenet", "equiformer-v2")
+
+    if cell.kind == "minibatch":
+        # sampled-fanout training, data-parallel over (pod, data); see
+        # DESIGN.md — model axis idle in the baseline (hillclimb target).
+        dp = math.prod([mesh.shape[a] for a in ba])
+        seeds = max(1, cell.dims["batch_nodes"] // dp)
+        fanout = cell.dims["fanout"]
+        d_feat = cell.dims["d_feat"]
+        blocks_spec, total_nodes = static_block_specs(seeds, fanout)
+        if arch == "graphsage-reddit":
+            cfg = dataclasses.replace(spec.make_config(), d_in=d_feat,
+                                      n_classes=41, sample_sizes=fanout)
+        elif arch == "gat-cora":
+            cfg = dataclasses.replace(spec.make_config(), d_in=d_feat,
+                                      n_classes=41)
+        else:
+            cfg = spec.make_config()
+        # stacked per-replica blocks, vmapped; dim0 sharded over (pod, data).
+        # n_dst is STATIC (segment_sum bound) — closed over, not a jit arg.
+        n_dsts = [b["n_dst"] for b in blocks_spec]
+        feats = SDS((dp, total_nodes, d_feat), jnp.float32)
+        labels = SDS((dp, seeds), jnp.int32)
+        blocks = [
+            {"src": SDS((dp, b["n_edges"]), jnp.int32),
+             "dst": SDS((dp, b["n_edges"]), jnp.int32),
+             "valid": SDS((dp, b["n_edges"]), jnp.bool_)}
+            for b in blocks_spec
+        ]
+        if arch == "graphsage-reddit":
+            base_loss = lambda p, f, bl, y: _sage_block_loss(cfg, p, f, bl, y)
+            params_sds = jax.eval_shape(
+                lambda k: gnn.sage_init(k, cfg), SDS((2,), jnp.uint32))
+        else:
+            base_loss = lambda p, f, bl, y: _generic_block_loss(arch, cfg, p, f, bl, y)
+            params_sds = _gnn_params_sds(arch, cfg)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+
+        def _with_ndst(bl_arrays):
+            return [dict(**a, n_dst=nd) for a, nd in zip(bl_arrays, n_dsts)]
+
+        def step(params, opt_state, feats, blocks, labels):
+            def mean_loss(p):
+                def per_rep(f, bl, y):
+                    return base_loss(p, f, _with_ndst(bl), y)
+                return jnp.mean(jax.vmap(per_rep)(feats, blocks, labels))
+            loss, grads = jax.value_and_grad(mean_loss)(params)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+        dshard = NamedSharding(mesh, P(ba))
+        in_sh = (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), dshard,
+                 [dict(src=dshard, dst=dshard, valid=dshard)
+                  for _ in blocks_spec],
+                 dshard)
+        flops = _gnn_flops(arch, cfg, total_nodes * dp,
+                           sum(b["n_edges"] for b in blocks_spec) * dp,
+                           d_feat) * 3.0
+        return CellPlan(arch, shape, step,
+                        (params_sds, opt_sds, feats, blocks, labels),
+                        in_sh,
+                        (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), rep),
+                        flops)
+
+    if cell.kind == "batched_small":
+        n = cell.dims["n_nodes"] * cell.dims["batch"]
+        e = cell.dims["n_edges"] * cell.dims["batch"]
+        d_feat = 16
+        nb = cell.dims["batch"]
+    else:
+        n, e = cell.dims["n_nodes"], cell.dims["n_edges"]
+        d_feat = cell.dims["d_feat"]
+        nb = 1
+
+    # ---- §Perf cell B variants: owner-partitioned SAGE w/ monitor gather
+    if variant.startswith("owner_gather") and arch == "graphsage-reddit" \
+            and cell.kind == "full_graph":
+        from repro.models.gnn_dist import make_sage_dist_step
+
+        n_pad, e_pad = _pad_to(n, nd), _pad_to(e, nd)
+        cfg = dataclasses.replace(spec.make_config(), d_in=d_feat, n_classes=47)
+        params_sds = jax.eval_shape(lambda k: gnn.sage_init(k, cfg),
+                                    SDS((2,), jnp.uint32))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        gather_dtype = jnp.bfloat16 if variant.endswith("bf16") else jnp.float32
+        step = make_sage_dist_step(
+            cfg, opt, mesh, all_axes, n_pad,
+            hierarchical=not variant.endswith("flat"),
+            gather_dtype=gather_dtype)
+        feats = SDS((n_pad, d_feat), jnp.float32)
+        ee = lambda dt: SDS((e_pad,), dt)
+        labels = SDS((n_pad,), jnp.int32)
+        args = (params_sds, opt_sds, feats, ee(jnp.int32), ee(jnp.int32),
+                ee(jnp.bool_), labels)
+        fshard = NamedSharding(mesh, P(all_axes, None))
+        in_sh = (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), fshard,
+                 shard0, shard0, shard0, shard0)
+        flops = _gnn_flops(arch, cfg, n_pad, e_pad, d_feat) * 3.0
+        return CellPlan(arch, shape, step, args, in_sh,
+                        (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), rep),
+                        flops, note=f"variant={variant}")
+
+    g_sds, n_pad, e_pad = _graph_sds(n, e, d_feat, geo, nd)
+    if cell.kind == "batched_small":
+        g_sds = dataclasses.replace(g_sds, graph_ids=SDS((n_pad,), jnp.int32))
+    gshard = Graph(
+        node_feat=NamedSharding(mesh, P(all_axes, None)),
+        edge_src=shard0, edge_dst=shard0, edge_valid=shard0,
+        n_nodes=n_pad,
+        edge_vec=NamedSharding(mesh, P(all_axes, None)) if geo else None,
+        graph_ids=shard0 if cell.kind == "batched_small" else None,
+    )
+
+    if arch == "gat-cora":
+        cfg = dataclasses.replace(spec.make_config(), d_in=d_feat,
+                                  n_classes=max(7, 8))
+        params_sds = jax.eval_shape(lambda k: gnn.gat_init(k, cfg),
+                                    SDS((2,), jnp.uint32))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        step = TS.make_gnn_train_step("gat", cfg, opt)
+        labels = SDS((n_pad,), jnp.int32)
+        args = (params_sds, opt_sds, g_sds, labels)
+        in_sh = (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), gshard, shard0)
+    elif arch == "graphsage-reddit":
+        cfg = dataclasses.replace(spec.make_config(), d_in=d_feat, n_classes=47)
+        params_sds = jax.eval_shape(lambda k: gnn.sage_init(k, cfg),
+                                    SDS((2,), jnp.uint32))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        step = TS.make_gnn_train_step("sage", cfg, opt)
+        labels = SDS((n_pad,), jnp.int32)
+        args = (params_sds, opt_sds, g_sds, labels)
+        in_sh = (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), gshard, shard0)
+    elif arch == "dimenet":
+        cfg = spec.make_config()
+        params_sds = jax.eval_shape(lambda k: gnn.dimenet_init(k, cfg),
+                                    SDS((2,), jnp.uint32))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        t_cap = _pad_to(min(8 * e_pad, 1 << 28), nd)
+        triplets = {"t_in": SDS((t_cap,), jnp.int32),
+                    "t_out": SDS((t_cap,), jnp.int32),
+                    "angle": SDS((t_cap,), jnp.float32),
+                    "valid": SDS((t_cap,), jnp.bool_)}
+        tshard = {"t_in": shard0, "t_out": shard0, "angle": shard0,
+                  "valid": shard0}
+        species = SDS((n_pad,), jnp.int32)
+        targets = SDS((nb,), jnp.float32)
+        step = TS.make_dimenet_train_step(cfg, opt, n_graphs=nb)
+        args = (params_sds, opt_sds, g_sds, species, triplets, targets)
+        in_sh = (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), gshard,
+                 shard0, tshard, rep)
+    else:  # equiformer-v2
+        cfg = spec.make_config()
+        params_sds = jax.eval_shape(lambda k: gnn.equiformer_init(k, cfg),
+                                    SDS((2,), jnp.uint32))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        species = SDS((n_pad,), jnp.int32)
+        targets = SDS((n_pad,), jnp.float32)
+        step = TS.make_equiformer_train_step(cfg, opt)
+        args = (params_sds, opt_sds, g_sds, species, targets)
+        in_sh = (rep_tree(params_sds, rep), rep_tree(opt_sds, rep), gshard,
+                 shard0, shard0)
+
+    flops = _gnn_flops(arch, cfg, n_pad, e_pad, d_feat) * 3.0  # fwd+bwd
+    out_sh = (in_sh[0], in_sh[1], rep)
+    return CellPlan(arch, shape, step, args, in_sh, out_sh, flops)
+
+
+def _sage_block_loss(cfg, params, feats, blocks, labels):
+    logits = gnn.sage_forward_blocks(params, feats, blocks, cfg)
+    return TS.softmax_xent(logits.astype(jnp.float32), labels)
+
+
+def _generic_block_loss(arch, cfg, params, feats, blocks, labels):
+    # gat / geometric archs on sampled blocks: aggregate with their own
+    # layer over each block treated as a bipartite graph
+    if arch == "gat-cora":
+        # run GAT layers over the innermost block graph
+        n = feats.shape[0]
+        g = Graph(node_feat=feats, edge_src=blocks[0]["src"],
+                  edge_dst=blocks[0]["dst"], edge_valid=blocks[0]["valid"],
+                  n_nodes=n)
+        logits = gnn.gat_forward(params, g, cfg)
+        k = labels.shape[0]
+        return TS.softmax_xent(logits[:k].astype(jnp.float32), labels)
+    if arch == "dimenet":
+        g = Graph(node_feat=feats, edge_src=blocks[0]["src"],
+                  edge_dst=blocks[0]["dst"], edge_valid=blocks[0]["valid"],
+                  n_nodes=feats.shape[0],
+                  edge_vec=jnp.ones((blocks[0]["src"].shape[0], 3), jnp.float32))
+        species = jnp.zeros((feats.shape[0],), jnp.int32)
+        e = blocks[0]["src"].shape[0]
+        triplets = {"t_in": jnp.zeros((e,), jnp.int32),
+                    "t_out": jnp.zeros((e,), jnp.int32),
+                    "angle": jnp.zeros((e,), jnp.float32),
+                    "valid": jnp.zeros((e,), bool)}
+        en = gnn.dimenet_energy(params, g, species, triplets, cfg, 1)
+        return jnp.mean(jnp.square(en))
+    # equiformer
+    g = Graph(node_feat=feats, edge_src=blocks[0]["src"],
+              edge_dst=blocks[0]["dst"], edge_valid=blocks[0]["valid"],
+              n_nodes=feats.shape[0],
+              edge_vec=jnp.ones((blocks[0]["src"].shape[0], 3), jnp.float32))
+    species = jnp.zeros((feats.shape[0],), jnp.int32)
+    out = gnn.equiformer_forward(params, g, species, cfg)
+    return jnp.mean(jnp.square(out))
+
+
+def _gnn_params_sds(arch, cfg):
+    init = {"gat-cora": gnn.gat_init, "dimenet": gnn.dimenet_init,
+            "equiformer-v2": gnn.equiformer_init}[arch]
+    return jax.eval_shape(lambda k: init(k, cfg), SDS((2,), jnp.uint32))
+
+
+def _gnn_flops(arch, cfg, n, e, d_feat) -> float:
+    """Analytic forward FLOPs (caller multiplies x3 for fwd+bwd)."""
+    if arch == "gat-cora":
+        d = cfg.d_hidden * cfg.n_heads
+        return 2.0 * n * d_feat * d + 6.0 * e * d
+    if arch == "graphsage-reddit":
+        d = cfg.d_hidden
+        return cfg.n_layers * (4.0 * n * d_feat * d + 2.0 * e * d)
+    if arch == "dimenet":
+        d, nb = cfg.d_hidden, cfg.n_bilinear
+        t = 8 * e
+        return cfg.n_blocks * (2.0 * e * d * d * (2 + nb) + 2.0 * t * nb * d)
+    # equiformer-v2
+    d, s = cfg.d_hidden, cfg.n_sph
+    per_edge = 2.0 * s * d * s * d / max(cfg.m_max * 2 + 1, 1)  # block-diag
+    return cfg.n_layers * (per_edge * e + 2.0 * n * d * d)
+
+
+def rep_tree(tree, rep):
+    return jax.tree.map(lambda _: rep, tree)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def recsys_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") -> CellPlan:
+    spec = get(arch)
+    cfg = spec.make_config()
+    cell = spec.shape(shape)
+    multi, ba = _axes(mesh)
+    rep = _rep(mesh)
+    all_axes = tuple(mesh.axis_names)
+    nd = math.prod(mesh.devices.shape)
+    params_sds = jax.eval_shape(lambda k: recsys.init_params(k, cfg),
+                                SDS((2,), jnp.uint32))
+    # tables row-sharded over model (row-cyclic by construction of ids)
+    pshard = rep_tree(params_sds, rep)
+    pshard["table"] = NamedSharding(mesh, P("model", None))
+    pshard["linear"] = NamedSharding(mesh, P("model"))
+
+    if cell.kind == "train":
+        b = cell.dims["batch"]
+        opt = AdamW(cosine(1e-3, 100, 10000))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        oshard = type(opt_sds)(rep, jax.tree.map(lambda s: s, pshard),
+                               jax.tree.map(lambda s: s, pshard))
+        step = TS.make_xdeepfm_train_step(cfg, opt)
+        batch = {"ids": SDS((b, cfg.n_sparse), jnp.int32),
+                 "labels": SDS((b,), jnp.float32)}
+        bshard = {"ids": NamedSharding(mesh, P(ba, None)),
+                  "labels": NamedSharding(mesh, P(ba))}
+        flops = _recsys_flops(cfg, b) * 3.0
+        return CellPlan(arch, shape, step, (params_sds, opt_sds, batch),
+                        (pshard, oshard, bshard), (pshard, oshard, rep), flops)
+
+    if cell.kind == "serve":
+        b = cell.dims["batch"]
+        step = TS.make_xdeepfm_serve_step(cfg)
+        ids = SDS((b, cfg.n_sparse), jnp.int32)
+        ishard = NamedSharding(mesh, P(ba, None))
+        flops = _recsys_flops(cfg, b)
+        return CellPlan(arch, shape, step, (params_sds, ids),
+                        (pshard, ishard), NamedSharding(mesh, P(ba)), flops)
+
+    # retrieval: 1 query vs n_candidates
+    nc = _pad_to(cell.dims["n_candidates"], nd)
+    d_out = cfg.mlp_layers[-1]
+    step = TS.make_retrieval_step(cfg)
+    q = SDS((1, cfg.n_sparse), jnp.int32)
+    cand = SDS((nc, d_out), jnp.float32)
+    cshard = NamedSharding(mesh, P(all_axes, None))
+    flops = 2.0 * nc * d_out + _recsys_flops(cfg, 1)
+    return CellPlan(arch, shape, step, (params_sds, q, cand),
+                    (pshard, rep, cshard), NamedSharding(mesh, P(all_axes)),
+                    flops)
+
+
+def _recsys_flops(cfg, b) -> float:
+    d = cfg.embed_dim
+    f0 = cfg.n_sparse
+    total = 0.0
+    prev = f0
+    for h in cfg.cin_layers:
+        total += 2.0 * b * h * f0 * prev * d
+        prev = h
+    dims = [f0 * d] + list(cfg.mlp_layers) + [1]
+    for a, c in zip(dims[:-1], dims[1:]):
+        total += 2.0 * b * a * c
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Graph500 (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") -> CellPlan:
+    from repro.core.distributed_bfs import ShardedGraph, make_dist_bfs
+
+    spec = get(arch)
+    cell = spec.shape(shape)
+    scale, ef = cell.dims["scale"], cell.dims["edge_factor"]
+    multi, ba = _axes(mesh)
+    nd = math.prod(mesh.devices.shape)
+    v = 1 << scale
+    e_directed = 2 * ef * v
+    v_pad = _pad_to(v, 32 * nd)
+    e_loc = _pad_to(int(1.1 * e_directed / nd), 128)
+    v_loc = v_pad // nd
+
+    g_sds = ShardedGraph(
+        src=SDS((nd, e_loc), jnp.int32),
+        dst_local=SDS((nd, e_loc), jnp.int32),
+        valid=SDS((nd, e_loc), jnp.bool_),
+        degree_local=SDS((nd, v_loc), jnp.int32),
+        num_vertices=v_pad, n_devices=nd,
+    )
+    if multi:
+        gaxes, maxes = ("pod", "data"), ("model",)
+    else:
+        gaxes, maxes = ("data",), ("model",)
+    mesh_axes = gaxes + maxes
+    shard0 = NamedSharding(mesh, P(mesh_axes))
+    root = SDS((), jnp.int32)
+    flops = 2.0 * e_directed  # semiring "flops": one AND+OR per edge/level-ish
+
+    hierarchical = "flat" not in variant
+
+    if variant.startswith("lean"):
+        # §Perf cell C: drop the valid bool array (sentinel src suffices)
+        # and feed PRE-CONVERTED owner-major source ids — kills one
+        # E-sized byte stream and two E-sized div/mod ops per level.
+        def run_lean(root, src_om, dst_local):
+            fn = jax.shard_map(
+                _dist_bfs_local_lean(v_pad, nd, v_loc, gaxes, maxes,
+                                     hierarchical),
+                mesh=mesh,
+                in_specs=(P(), P(mesh_axes), P(mesh_axes)),
+                out_specs=(P(mesh_axes), P(mesh_axes)),
+            )
+            return fn(root, src_om, dst_local)
+
+        return CellPlan(arch, shape, run_lean,
+                        (root, g_sds.src, g_sds.dst_local),
+                        (_rep(mesh), shard0, shard0),
+                        (shard0, shard0), flops, note=f"variant={variant}")
+
+    def run(root, src, dst_local, valid):
+        fn = jax.shard_map(
+            _dist_bfs_local(v_pad, nd, v_loc, gaxes, maxes, hierarchical),
+            mesh=mesh,
+            in_specs=(P(), P(mesh_axes), P(mesh_axes), P(mesh_axes)),
+            out_specs=(P(mesh_axes), P(mesh_axes)),
+        )
+        parent, level = fn(root, src, dst_local, valid)
+        return parent, level
+
+    return CellPlan(arch, shape, run,
+                    (root, g_sds.src, g_sds.dst_local, g_sds.valid),
+                    (_rep(mesh), shard0, shard0, shard0),
+                    (shard0, shard0), flops)
+
+
+def _dist_bfs_local(v_pad, p, v_loc, gaxes, maxes, hierarchical):
+    import jax.numpy as jnp
+    from jax import lax
+    from repro.comms.hierarchical import hierarchical_all_gather
+    from repro.core.heavy import pack_bitmap
+    from repro.core.distributed_bfs import _local_level
+
+    axes = gaxes + maxes
+
+    def _flat_index(names):
+        idx = jnp.int32(0)
+        for n in names:
+            idx = idx * lax.axis_size(n) + lax.axis_index(n)
+        return idx
+
+    def local_bfs(root, src, dst_local, valid):
+        gi = _flat_index(gaxes)
+        mi = _flat_index(maxes)
+        m = 1
+        for n in maxes:
+            m = m * lax.axis_size(n)
+        dev = gi * m + mi
+        src, dst_local, valid = src[0], dst_local[0], valid[0]
+        parent = jnp.full((v_loc,), v_pad, jnp.int32)
+        is_mine = (root % p) == dev
+        slot = root // p
+        parent = jnp.where((jnp.arange(v_loc) == slot) & is_mine, root, parent)
+        level = jnp.where(parent != v_pad, 0, -1).astype(jnp.int32)
+        newly = parent != v_pad
+
+        def cond(st):
+            return st[3] & (st[4] < 48)
+
+        def body(st):
+            parent, level, newly, _, lvl = st
+            local_bm = pack_bitmap(newly, v_loc // 32)
+            if hierarchical:
+                frontier_bm = hierarchical_all_gather(local_bm, gaxes, maxes)
+            else:
+                frontier_bm = lax.all_gather(local_bm, axes, axis=0, tiled=True)
+            som = (src % p) * v_loc + src // p
+            som = jnp.where(valid, som, p * v_loc)
+            new_parent, won = _local_level(som, dst_local, valid,
+                                           frontier_bm, parent, v_pad)
+            tru = jnp.where(won, (new_parent % v_loc) * p + new_parent // v_loc,
+                            new_parent)
+            parent = jnp.where(won, tru, parent)
+            level = jnp.where(won, lvl, level)
+            any_new = lax.psum(jnp.sum(won.astype(jnp.int32)), axes) > 0
+            return parent, level, won, any_new, lvl + 1
+
+        st = lax.while_loop(cond, body,
+                            (parent, level, newly, jnp.bool_(True), jnp.int32(1)))
+        parent, level = st[0], st[1]
+        return parent[None], level[None]
+
+    return local_bfs
+
+
+def _dist_bfs_local_lean(v_pad, p, v_loc, gaxes, maxes, hierarchical):
+    """Cell-C lean BFS body: 2 edge arrays instead of 3, owner-major src
+    precomputed once on the host (it is loop-invariant)."""
+    import jax.numpy as jnp
+    from jax import lax
+    from repro.comms.hierarchical import hierarchical_all_gather
+    from repro.core.heavy import pack_bitmap
+    from repro.core.distributed_bfs import _local_level
+
+    axes = gaxes + maxes
+
+    def _flat_index(names):
+        idx = jnp.int32(0)
+        for n in names:
+            idx = idx * lax.axis_size(n) + lax.axis_index(n)
+        return idx
+
+    def local_bfs(root, src_om, dst_local):
+        gi = _flat_index(gaxes)
+        mi = _flat_index(maxes)
+        m = 1
+        for n in maxes:
+            m = m * lax.axis_size(n)
+        dev = gi * m + mi
+        src_om, dst_local = src_om[0], dst_local[0]
+        valid = src_om < p * v_loc          # sentinel encodes validity
+        parent = jnp.full((v_loc,), v_pad, jnp.int32)
+        is_mine = (root % p) == dev
+        slot = root // p
+        parent = jnp.where((jnp.arange(v_loc) == slot) & is_mine, root, parent)
+        level = jnp.where(parent != v_pad, 0, -1).astype(jnp.int32)
+        newly = parent != v_pad
+
+        def cond(st):
+            return st[3] & (st[4] < 48)
+
+        def body(st):
+            parent, level, newly, _, lvl = st
+            local_bm = pack_bitmap(newly, v_loc // 32)
+            if hierarchical:
+                frontier_bm = hierarchical_all_gather(local_bm, gaxes, maxes)
+            else:
+                frontier_bm = lax.all_gather(local_bm, axes, axis=0, tiled=True)
+            new_parent, won = _local_level(src_om, dst_local, valid,
+                                           frontier_bm, parent, v_pad)
+            tru = jnp.where(won, (new_parent % v_loc) * p + new_parent // v_loc,
+                            new_parent)
+            parent = jnp.where(won, tru, parent)
+            level = jnp.where(won, lvl, level)
+            any_new = lax.psum(jnp.sum(won.astype(jnp.int32)), axes) > 0
+            return parent, level, won, any_new, lvl + 1
+
+        st = lax.while_loop(cond, body,
+                            (parent, level, newly, jnp.bool_(True), jnp.int32(1)))
+        return st[0][None], st[1][None]
+
+    return local_bfs
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline",
+               n_layers_override: int | None = None,
+               unroll: bool = False) -> CellPlan:
+    family = get(arch).family
+    if family == "lm":
+        return lm_cell(arch, shape, mesh, variant,
+                       n_layers_override=n_layers_override, unroll=unroll)
+    fn = {"gnn": gnn_cell, "recsys": recsys_cell,
+          "graph500": graph500_cell}[family]
+    return fn(arch, shape, mesh, variant)

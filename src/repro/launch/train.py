@@ -1,0 +1,99 @@
+"""Training/serving CLI launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch xdeepfm --steps 10
+    PYTHONPATH=src python -m repro.launch.train --arch graph500 --scale 10
+
+Uses the smoke config by default (this container is one CPU); pass
+--full to instantiate the full architecture (needs a real fleet).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import all_arch_ids, get
+from repro.data import synthetic as S
+from repro.data.graphs import make_feature_graph, make_molecule_batch
+from repro.optim import AdamW, cosine, wsd
+from repro.train import train_step as TS
+from repro.train.loop import LoopConfig, run_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=all_arch_ids())
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    cfg = spec.make_config() if args.full else spec.make_smoke_config()
+    print(f"[train] arch={args.arch} family={spec.family} cfg={cfg}")
+
+    if spec.family == "graph500":
+        from repro.core import run
+        cfg = dataclasses.replace(cfg, scale=args.scale)
+        built, result = run(cfg)
+        print(f"[train] GTEPS={result.harmonic_mean_teps / 1e9:.5f} "
+              f"valid={result.all_valid}")
+        return
+
+    if spec.family == "lm":
+        from repro.models import transformer as T
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        sched = wsd(3e-4, 5, max(args.steps - 15, 5), 10) \
+            if args.arch == "minicpm-2b" else cosine(3e-4, 5, args.steps)
+        opt = AdamW(sched)
+        step = jax.jit(TS.make_lm_train_step(cfg, opt))
+        batch_fn = lambda i: S.lm_batch(0, i, args.batch, args.seq, cfg.vocab)
+    elif spec.family == "recsys":
+        from repro.models import recsys
+        params = recsys.init_params(jax.random.PRNGKey(0), cfg)
+        opt = AdamW(cosine(1e-3, 5, args.steps))
+        step = jax.jit(TS.make_xdeepfm_train_step(cfg, opt))
+        batch_fn = lambda i: S.recsys_batch(0, i, args.batch * 8,
+                                            cfg.n_sparse, cfg.rows_per_field)
+    else:  # gnn
+        from repro.models import gnn
+        opt = AdamW(cosine(1e-3, 5, args.steps))
+        if args.arch in ("gat-cora", "graphsage-reddit"):
+            g, labels = make_feature_graph(0, args.scale, d_feat=cfg.d_in,
+                                           n_classes=cfg.n_classes,
+                                           edge_factor=4)
+            init = gnn.gat_init if args.arch == "gat-cora" else gnn.sage_init
+            params = init(jax.random.PRNGKey(0), cfg)
+            kind = "gat" if args.arch == "gat-cora" else "sage"
+            raw = jax.jit(TS.make_gnn_train_step(kind, cfg, opt))
+            step = lambda p, s, _b: raw(p, s, g, labels)
+        else:
+            g, species, tri = make_molecule_batch(0, 8, 8, 16)
+            if args.arch == "dimenet":
+                params = gnn.dimenet_init(jax.random.PRNGKey(0), cfg)
+                raw = jax.jit(TS.make_dimenet_train_step(cfg, opt, 8))
+                tgt = jax.numpy.zeros((8,))
+                step = lambda p, s, _b: raw(p, s, g, species, tri, tgt)
+            else:
+                params = gnn.equiformer_init(jax.random.PRNGKey(0), cfg)
+                raw = jax.jit(TS.make_equiformer_train_step(cfg, opt))
+                tgt = jax.numpy.zeros((g.n_nodes,))
+                step = lambda p, s, _b: raw(p, s, g, species, tgt)
+        batch_fn = lambda i: None
+
+    opt_state = opt.init(params)
+    lc = LoopConfig(total_steps=args.steps,
+                    ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 2, 1),
+                    log_every=max(args.steps // 10, 1))
+    _, _, losses = run_loop(lc, params, opt_state, step, batch_fn)
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,406 @@
+"""GNN model zoo: GAT, GraphSAGE, DimeNet, EquiformerV2 (eSCN-style).
+
+Message passing is built exclusively on ``jax.ops.segment_sum / segment_max``
+over edge-index arrays (JAX has no CSR — per the assignment this substrate
+IS part of the system). All shapes static; padded edges carry ``dst == N``
+sentinels and a validity mask.
+
+Paper-technique tie-ins (DESIGN.md §4): graphs are degree-sort relabeled
+with ``repro.core.reorder`` before training (locality), and the
+full-graph distributed path exchanges node features with the hierarchical
+monitor collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.util import pytree_dataclass
+
+Params = dict[str, Any]
+
+
+@pytree_dataclass(meta=("n_nodes",))
+class Graph:
+    """Static-shape edge-list graph with node features."""
+
+    node_feat: jax.Array    # [N, F] float
+    edge_src: jax.Array     # [E] int32 (sentinel N on padding)
+    edge_dst: jax.Array     # [E] int32
+    edge_valid: jax.Array   # [E] bool
+    n_nodes: int
+    edge_vec: jax.Array | None = None   # [E, 3] displacement (molecular)
+    graph_ids: jax.Array | None = None  # [N] int32 graph id (batched mode)
+
+
+def segment_softmax(scores: jax.Array, seg: jax.Array, n: int) -> jax.Array:
+    smax = jax.ops.segment_max(scores, seg, num_segments=n + 1)
+    smax = jnp.nan_to_num(smax, neginf=0.0)
+    ex = jnp.exp(scores - smax[seg])
+    den = jax.ops.segment_sum(ex, seg, num_segments=n + 1)
+    return ex / jnp.clip(den[seg], 1e-9)
+
+
+def _glorot(key, shape, dtype=jnp.float32):
+    fan = sum(shape[-2:]) if len(shape) >= 2 else shape[0]
+    return (jax.random.normal(key, shape) * math.sqrt(2.0 / fan)).astype(dtype)
+
+
+# ===========================================================================
+# GAT  [1710.10903] — SDDMM edge scores -> segment softmax -> SpMM
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    negative_slope: float = 0.2
+
+
+def gat_init(key, cfg: GATConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers * 3)
+    params = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        params.append({
+            "w": _glorot(keys[3 * i], (d_in, heads * d_out)),
+            "a_src": _glorot(keys[3 * i + 1], (heads, d_out)),
+            "a_dst": _glorot(keys[3 * i + 2], (heads, d_out)),
+        })
+        d_in = heads * d_out
+    return {"layers": params}
+
+
+def gat_layer(p: Params, g: Graph, h: jax.Array, heads: int, d_out: int,
+              slope: float, last: bool) -> jax.Array:
+    n = g.n_nodes
+    z = (h @ p["w"]).reshape(-1, heads, d_out)              # [N, H, D]
+    zs = jnp.concatenate([z, jnp.zeros((1, heads, d_out), z.dtype)])
+    src, dst = g.edge_src, g.edge_dst
+    e = jnp.sum(zs[src] * p["a_src"], -1) + jnp.sum(zs[dst] * p["a_dst"], -1)
+    e = jax.nn.leaky_relu(e, slope)                          # [E, H]
+    e = jnp.where(g.edge_valid[:, None], e, -jnp.inf)
+    seg = jnp.where(g.edge_valid, dst, n)
+    alpha = segment_softmax(e, seg, n)                       # [E, H]
+    msg = zs[src] * alpha[:, :, None]
+    out = jax.ops.segment_sum(msg, seg, num_segments=n + 1)[:n]
+    out = out.reshape(n, heads * d_out) if not last else out.mean(axis=1)
+    return out if last else jax.nn.elu(out)
+
+
+def gat_forward(params: Params, g: Graph, cfg: GATConfig) -> jax.Array:
+    h = g.node_feat
+    for i, lp in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        h = gat_layer(lp, g, h, heads, d_out, cfg.negative_slope, last)
+    return h  # [N, n_classes] logits
+
+
+# ===========================================================================
+# GraphSAGE [1706.02216] — mean aggregator; full-graph + sampled-block modes
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    n_classes: int = 41
+    sample_sizes: tuple[int, ...] = (25, 10)
+
+
+def sage_init(key, cfg: SAGEConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers * 2)
+    params = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        d_out = cfg.n_classes if i == cfg.n_layers - 1 else cfg.d_hidden
+        params.append({
+            "w_self": _glorot(keys[2 * i], (d_in, d_out)),
+            "w_neigh": _glorot(keys[2 * i + 1], (d_in, d_out)),
+        })
+        d_in = d_out
+    return {"layers": params}
+
+
+def sage_layer(p: Params, h_src: jax.Array, h_dst: jax.Array,
+               src: jax.Array, dst: jax.Array, valid: jax.Array,
+               n_dst: int, last: bool) -> jax.Array:
+    hs = jnp.concatenate([h_src, jnp.zeros((1, h_src.shape[1]), h_src.dtype)])
+    seg = jnp.where(valid, dst, n_dst)
+    msum = jax.ops.segment_sum(hs[jnp.where(valid, src, h_src.shape[0])],
+                               seg, num_segments=n_dst + 1)[:n_dst]
+    cnt = jax.ops.segment_sum(valid.astype(h_src.dtype), seg,
+                              num_segments=n_dst + 1)[:n_dst]
+    mean = msum / jnp.clip(cnt[:, None], 1.0)
+    out = h_dst @ p["w_self"] + mean @ p["w_neigh"]
+    return out if last else jax.nn.relu(out)
+
+
+def sage_forward(params: Params, g: Graph, cfg: SAGEConfig) -> jax.Array:
+    """Full-graph mode."""
+    h = g.node_feat
+    for i, lp in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        h = sage_layer(lp, h, h, g.edge_src, g.edge_dst, g.edge_valid,
+                       g.n_nodes, last)
+    return h
+
+
+def sage_forward_blocks(params: Params, feats: jax.Array, blocks, cfg: SAGEConfig):
+    """Sampled-minibatch mode (fanout blocks from data/sampler.py).
+
+    ``feats``: [N_hop0, F] features of the outermost sampled frontier;
+    ``blocks``: list (outer->inner) of dicts with src/dst/valid/n_dst —
+    src indexes the previous layer's rows, dst the next layer's rows.
+    """
+    h = feats
+    for i, (lp, blk) in enumerate(zip(params["layers"], blocks)):
+        last = i == cfg.n_layers - 1
+        h_dst = h[: blk["n_dst"]]
+        h = sage_layer(lp, h, h_dst, blk["src"], blk["dst"], blk["valid"],
+                       blk["n_dst"], last)
+    return h
+
+
+# ===========================================================================
+# DimeNet [2003.03123] — RBF/SBF bases + triplet (directional) messages
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_species: int = 16
+    n_targets: int = 1
+
+
+def _bessel_rbf(d: jax.Array, n: int, cutoff: float) -> jax.Array:
+    """Bessel radial basis: sqrt(2/c) * sin(n pi d / c) / d."""
+    freq = jnp.arange(1, n + 1, dtype=jnp.float32) * jnp.pi
+    dn = jnp.clip(d, 1e-6)[:, None] / cutoff
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(freq * dn) / (dn * cutoff)
+
+
+def _angular_sbf(angle: jax.Array, d: jax.Array, ns: int, nr: int,
+                 cutoff: float) -> jax.Array:
+    """Simplified spherical basis: Fourier(angle) x Bessel(d) (structure-
+    faithful to DimeNet's j_l * Y_l; exact Bessel zeros omitted —
+    documented fidelity note in DESIGN.md §6)."""
+    ls = jnp.arange(ns, dtype=jnp.float32)
+    ang = jnp.cos(angle[:, None] * (ls + 1.0))            # [T, ns]
+    rad = _bessel_rbf(d, nr, cutoff)                       # [T, nr]
+    return (ang[:, :, None] * rad[:, None, :]).reshape(-1, ns * nr)
+
+
+def dimenet_init(key, cfg: DimeNetConfig) -> Params:
+    ks = iter(jax.random.split(key, 6 + cfg.n_blocks * 6))
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    nsr = cfg.n_spherical * cfg.n_radial
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "w_msg": _glorot(next(ks), (d, d)),
+            "w_sbf": _glorot(next(ks), (nsr, nb)),
+            "w_tri_in": _glorot(next(ks), (d, nb * d)),
+            "w_tri_out": _glorot(next(ks), (d, d)),
+            "w_update": _glorot(next(ks), (d, d)),
+            "w_rbf": _glorot(next(ks), (cfg.n_radial, d)),
+        })
+    return {
+        "species_emb": _glorot(next(ks), (cfg.n_species, d)),
+        "w_edge_in": _glorot(next(ks), (2 * d + cfg.n_radial, d)),
+        "w_out_rbf": _glorot(next(ks), (cfg.n_radial, d)),
+        "w_out1": _glorot(next(ks), (d, d)),
+        "w_out2": _glorot(next(ks), (d, cfg.n_targets)),
+        "blocks": blocks,
+    }
+
+
+def dimenet_forward(params: Params, g: Graph, species: jax.Array,
+                    triplets, cfg: DimeNetConfig) -> jax.Array:
+    """Energy per graph. ``triplets``: dict with
+    t_in [T] (edge k->j), t_out [T] (edge j->i), angle [T], valid [T]."""
+    n, e = g.n_nodes, g.edge_src.shape[0]
+    d_vec = g.edge_vec                                     # [E, 3]
+    dist = jnp.linalg.norm(d_vec, axis=-1)
+    rbf = _bessel_rbf(dist, cfg.n_radial, cfg.cutoff)      # [E, nr]
+    h = params["species_emb"][species]                     # [N, D]
+    hs = jnp.concatenate([h, jnp.zeros((1, cfg.d_hidden), h.dtype)])
+    src = jnp.where(g.edge_valid, g.edge_src, n)
+    dst = jnp.where(g.edge_valid, g.edge_dst, n)
+    m = jax.nn.silu(
+        jnp.concatenate([hs[src], hs[dst], rbf], axis=-1) @ params["w_edge_in"])
+
+    t_in, t_out = triplets["t_in"], triplets["t_out"]
+    t_valid = triplets["valid"]
+    sbf = _angular_sbf(triplets["angle"], dist[jnp.clip(t_in, 0, e - 1)],
+                       cfg.n_spherical, cfg.n_radial, cfg.cutoff)
+    sbf = jnp.where(t_valid[:, None], sbf, 0.0)
+
+    for bp in params["blocks"]:
+        m2 = jax.nn.silu(m @ bp["w_msg"]) * (rbf @ bp["w_rbf"])
+        # directional triplet message: bilinear over n_bilinear dim
+        basis = sbf @ bp["w_sbf"]                          # [T, nb]
+        src_m = jax.nn.silu(m2 @ bp["w_tri_in"])           # [E, nb*D]
+        src_m = src_m.reshape(e, cfg.n_bilinear, cfg.d_hidden)
+        tm = jnp.einsum("tb,tbd->td", basis,
+                        src_m[jnp.clip(t_in, 0, e - 1)])
+        seg = jnp.where(t_valid, t_out, e)
+        agg = jax.ops.segment_sum(tm, seg, num_segments=e + 1)[:e]
+        m = m + jax.nn.silu((m2 + agg @ bp["w_tri_out"]) @ bp["w_update"])
+
+    # per-node readout: sum incoming messages weighted by rbf gate
+    gate = rbf @ params["w_out_rbf"]
+    node = jax.ops.segment_sum(
+        jnp.where(g.edge_valid[:, None], m * gate, 0.0), dst,
+        num_segments=n + 1)[:n]
+    return jax.nn.silu(node @ params["w_out1"]) @ params["w_out2"]  # [N, T]
+
+
+def dimenet_energy(params, g, species, triplets, cfg, n_graphs: int = 1):
+    per_node = dimenet_forward(params, g, species, triplets, cfg)
+    if g.graph_ids is None:
+        return jnp.sum(per_node, axis=0, keepdims=True)  # [1, n_targets]
+    return jax.ops.segment_sum(per_node, g.graph_ids, num_segments=n_graphs)
+
+
+# ===========================================================================
+# EquiformerV2 [2306.12059] — eSCN-style SO(2) convolutions, l_max=6, m_max=2
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerConfig:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_species: int = 16
+    n_radial: int = 8
+    cutoff: float = 5.0
+    n_targets: int = 1
+
+    @property
+    def channel_layout(self) -> list[tuple[int, int]]:
+        """(l, m) channels with |m| <= min(l, m_max); m<0 as separate rows."""
+        out = []
+        for l in range(self.l_max + 1):
+            for m in range(-min(l, self.m_max), min(l, self.m_max) + 1):
+                out.append((l, m))
+        return out
+
+    @property
+    def n_sph(self) -> int:
+        return len(self.channel_layout)   # 29 for l_max=6, m_max=2
+
+
+def _m_groups(cfg: EquiformerConfig):
+    """Indices grouped by |m|: m=0 real block; |m|>0 (cos, sin) pairs."""
+    lay = cfg.channel_layout
+    g0 = [i for i, (l, m) in enumerate(lay) if m == 0]
+    pairs = []
+    for mm in range(1, cfg.m_max + 1):
+        plus = [i for i, (l, m) in enumerate(lay) if m == mm]
+        minus = [i for i, (l, m) in enumerate(lay) if m == -mm]
+        pairs.append((minus, plus))
+    return g0, pairs
+
+
+def equiformer_init(key, cfg: EquiformerConfig) -> Params:
+    ks = iter(jax.random.split(key, 4 + cfg.n_layers * (6 + 2 * cfg.m_max)))
+    d = cfg.d_hidden
+    g0, pairs = _m_groups(cfg)
+    layers = []
+    for _ in range(cfg.n_layers):
+        lp = {
+            "w_m0": _glorot(next(ks), (len(g0), d, len(g0), d)),
+            "w_radial": _glorot(next(ks), (cfg.n_radial, d)),
+            "w_attn": _glorot(next(ks), (d, cfg.n_heads)),
+            "w_val": _glorot(next(ks), (d, d)),
+            "w_upd": _glorot(next(ks), (d, d)),
+        }
+        for gi, (minus, plus) in enumerate(pairs):
+            k = len(plus)
+            lp[f"w_m{gi + 1}_re"] = _glorot(next(ks), (k, d, k, d))
+            lp[f"w_m{gi + 1}_im"] = _glorot(next(ks), (k, d, k, d))
+        layers.append(lp)
+    return {
+        "species_emb": _glorot(next(ks), (cfg.n_species, d)),
+        "w_out1": _glorot(next(ks), (d, d)),
+        "w_out2": _glorot(next(ks), (d, cfg.n_targets)),
+        "layers": layers,
+    }
+
+
+def _so2_conv(lp: Params, x: jax.Array, cfg: EquiformerConfig) -> jax.Array:
+    """Block-diagonal SO(2)-equivariant linear map over (sph, channel).
+
+    x: [E, S, D]. m=0 block is a free linear map; each |m| block applies
+    the (re, im) rotation-commuting pair — eSCN's core trick, O(L^3)."""
+    g0, pairs = _m_groups(cfg)
+    out = jnp.zeros_like(x)
+    x0 = x[:, jnp.array(g0)]                       # [E, k0, D]
+    y0 = jnp.einsum("ekd,kdlf->elf", x0, lp["w_m0"])
+    out = out.at[:, jnp.array(g0)].set(y0)
+    for gi, (minus, plus) in enumerate(pairs):
+        re, im = lp[f"w_m{gi + 1}_re"], lp[f"w_m{gi + 1}_im"]
+        xp = x[:, jnp.array(plus)]                 # cos part
+        xm = x[:, jnp.array(minus)]                # sin part
+        yp = jnp.einsum("ekd,kdlf->elf", xp, re) - jnp.einsum("ekd,kdlf->elf", xm, im)
+        ym = jnp.einsum("ekd,kdlf->elf", xp, im) + jnp.einsum("ekd,kdlf->elf", xm, re)
+        out = out.at[:, jnp.array(plus)].set(yp)
+        out = out.at[:, jnp.array(minus)].set(ym)
+    return out
+
+
+def equiformer_forward(params: Params, g: Graph, species: jax.Array,
+                       cfg: EquiformerConfig) -> jax.Array:
+    """Per-node scalar predictions [N, n_targets]."""
+    n = g.n_nodes
+    d = cfg.d_hidden
+    s = cfg.n_sph
+    dist = jnp.linalg.norm(g.edge_vec, axis=-1)
+    rbf = _bessel_rbf(dist, cfg.n_radial, cfg.cutoff)          # [E, nr]
+    x = jnp.zeros((n, s, d))
+    x = x.at[:, 0].set(params["species_emb"][species])          # l=0 init
+    xs = jnp.concatenate([x, jnp.zeros((1, s, d), x.dtype)])
+    src = jnp.where(g.edge_valid, g.edge_src, n)
+    dst = jnp.where(g.edge_valid, g.edge_dst, n)
+
+    for lp in params["layers"]:
+        xs = xs.at[:n].set(x)
+        feat = xs[src]                                         # [E, S, D]
+        radial = jax.nn.silu(rbf @ lp["w_radial"])             # [E, D]
+        msg = _so2_conv(lp, feat, cfg) * radial[:, None, :]
+        # invariant attention over incoming edges (l=0 channel)
+        scores = msg[:, 0] @ lp["w_attn"]                      # [E, H]
+        scores = jnp.where(g.edge_valid[:, None], scores, -jnp.inf)
+        seg = jnp.where(g.edge_valid, dst, n)
+        alpha = segment_softmax(scores, seg, n)                # [E, H]
+        gate = jnp.mean(alpha, axis=-1)[:, None, None]
+        agg = jax.ops.segment_sum(msg * gate, seg, num_segments=n + 1)[:n]
+        upd = jnp.einsum("nsd,df->nsf", agg, lp["w_upd"])
+        x = x + upd
+    inv = x[:, 0]                                              # [N, D] scalars
+    return jax.nn.silu(inv @ params["w_out1"]) @ params["w_out2"]

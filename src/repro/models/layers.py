@@ -1,0 +1,231 @@
+"""Model building blocks: norms, RoPE, GQA attention, MLPs.
+
+Pure-functional (params are plain dict pytrees); bf16 activations with
+fp32 accumulation everywhere (``preferred_element_type``), fp32 norms.
+Sharding is applied by the caller via in_shardings +
+``with_sharding_constraint`` hints baked into the transformer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms. olmo-1b uses *non-parametric* LayerNorm (no scale/bias) [2402.00838].
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array | None, bias: jax.Array | None,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, p: Params | None) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p.get("bias"))
+    if kind == "nonparametric_ln":  # olmo
+        return layernorm(x, None, None)
+    raise ValueError(kind)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32) -> Params | None:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparametric_ln":
+        return {}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE [2104.09864]
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                             # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (batched full-sequence form + single-token decode form)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def init_attention(key, dims: AttnDims, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, hk, dh = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": (jax.random.normal(k1, (d, h * dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, hk * dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, hk * dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * dh, d)) * s).astype(dtype),
+    }
+
+
+def attention(
+    p: Params,
+    x: jax.Array,              # [B, S, D]
+    dims: AttnDims,
+    *,
+    positions: jax.Array | None = None,
+    rope_theta: float = 10000.0,
+    causal: bool = True,
+    window: int | None = None,   # sliding-window attention (beyond-spec mode)
+    q_chunk: int | None = None,  # exact query-chunked attention (§Perf):
+    #   caps the live score block at [B, H, q_chunk, S] — the flash-style
+    #   memory fix for the 32k prefill cells
+    unroll_chunks: bool = False,
+) -> jax.Array:
+    b, s, d = x.shape
+    h, hk, dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    positions = jnp.broadcast_to(positions, (b, s))
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, hk, dh)
+    v = (x @ p["wv"]).reshape(b, s, hk, dh)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    # Grouped form: never materialize expanded KV (GQA's point).
+    g = dims.q_per_kv
+    qg = q.reshape(b, s, hk, g, dh)
+
+    def block(qg_c, pos_c):
+        """qg_c [B, qc, HK, G, Dh]; pos_c [B, qc] -> out [B, qc, H*Dh]."""
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg_c, k,
+                            preferred_element_type=jnp.float32) / math.sqrt(dh)
+        if causal:
+            mask = pos_c[:, :, None] >= positions[:, None, :]  # [B, qc, Sk]
+            if window is not None:
+                mask = mask & (pos_c[:, :, None] - positions[:, None, :] < window)
+            scores = jnp.where(mask[:, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(x.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(qg_c.shape[0], qg_c.shape[1], h * dh).astype(x.dtype)
+
+    if q_chunk is None or s <= q_chunk or s % q_chunk:
+        out = block(qg, positions)
+    else:
+        nc = s // q_chunk
+        qs = jnp.moveaxis(qg.reshape(b, nc, q_chunk, hk, g, dh), 1, 0)
+        ps = jnp.moveaxis(positions.reshape(b, nc, q_chunk), 1, 0)
+        _, outs = jax.lax.scan(
+            lambda _, qp: (None, block(*qp)), None, (qs, ps),
+            unroll=nc if unroll_chunks else 1)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h * dh)
+    return out @ p["wo"]
+
+
+def decode_attention(
+    p: Params,
+    x: jax.Array,              # [B, 1, D] — one new token
+    cache_k: jax.Array,        # [B, S_max, HK, Dh]
+    cache_v: jax.Array,
+    pos: jax.Array,            # [] int32 current position
+    dims: AttnDims,
+    *,
+    rope_theta: float = 10000.0,
+    window: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-step KV-cache attention; returns (out, new_k, new_v)."""
+    b, _, d = x.shape
+    h, hk, dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    s_max = cache_k.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, h, dh)
+    k_new = (x @ p["wk"]).reshape(b, 1, hk, dh)
+    v_new = (x @ p["wv"]).reshape(b, 1, hk, dh)
+    posb = jnp.broadcast_to(pos[None, None], (b, 1))
+    q = apply_rope(q, posb, rope_theta)
+    k_new = apply_rope(k_new, posb, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos, axis=1)
+    g = dims.q_per_kv
+    qg = q.reshape(b, hk, g, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    span = jnp.arange(s_max)
+    valid = span <= pos
+    if window is not None:
+        valid = valid & (span > pos - window)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(x.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * dh).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs: plain GELU (starcoder2) and gated SwiGLU (llama-likes)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, kind: str, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) * s_out).astype(dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ p["w_in"])
+    elif kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:
+        raise ValueError(kind)
+    return h @ p["w_out"]

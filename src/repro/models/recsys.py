@@ -1,0 +1,162 @@
+"""xDeepFM [1803.05170]: sparse embeddings + CIN + DNN + linear.
+
+JAX has no ``nn.EmbeddingBag`` and no CSR — the embedding-bag here is
+built from ``jnp.take`` + ``jax.ops.segment_sum`` (assignment requirement).
+
+Paper-technique tie-ins (DESIGN.md §4):
+  * hot-ID rows ≙ heavy vertices: tables are *row-cyclic* sharded
+    (row % n_shards — eq. 3's round-robin rule) so power-law-hot rows
+    spread across all shards;
+  * the distributed lookup (serve path, launch/dryrun) exchanges ids with
+    the hierarchical monitor all-to-all;
+  * the CIN layer runs the fused Pallas kernel (kernels/cin.py) to avoid
+    materializing the [B, F0, Fl, D] outer product.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple[int, ...] = (200, 200, 200)
+    mlp_layers: tuple[int, ...] = (400, 400)
+    rows_per_field: int = 1 << 20    # power-law synthetic vocab per field
+    n_dense: int = 0                 # the assigned config is all-sparse
+    use_cin_kernel: bool = False     # fused Pallas CIN (ops.cin_layer)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag: take + segment_sum (multi-hot general form)
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jax.Array, ids: jax.Array, bag_ids: jax.Array,
+                  n_bags: int, weights: jax.Array | None = None,
+                  mode: str = "sum") -> jax.Array:
+    """table [R, D]; ids [L]; bag_ids [L] -> [n_bags, D].
+
+    The JAX-native EmbeddingBag: ragged bags are flattened with a bag-id
+    vector (invalid slots use bag_id == n_bags)."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags + 1)[:n_bags]
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, table.dtype), bag_ids,
+                                  num_segments=n_bags + 1)[:n_bags]
+        out = out / jnp.clip(cnt[:, None], 1.0)
+    return out
+
+
+def init_params(key, cfg: XDeepFMConfig, dtype=jnp.float32) -> Params:
+    ks = iter(jax.random.split(key, 6 + len(cfg.cin_layers) + len(cfg.mlp_layers)))
+    f, d = cfg.n_sparse, cfg.embed_dim
+    rows = cfg.rows_per_field * f
+    p: Params = {
+        # single fused table; field i uses row block [i*R, (i+1)*R)
+        "table": (jax.random.normal(next(ks), (rows, d)) * 0.01).astype(dtype),
+        "linear": (jax.random.normal(next(ks), (rows,)) * 0.01).astype(dtype),
+        "bias": jnp.zeros((), dtype),
+    }
+    cin = []
+    prev = f
+    for h in cfg.cin_layers:
+        cin.append({"w": (jax.random.normal(next(ks), (h, f, prev))
+                          * math.sqrt(1.0 / (f * prev))).astype(dtype)})
+        prev = h
+    p["cin"] = cin
+    p["cin_out"] = (jax.random.normal(next(ks), (sum(cfg.cin_layers), 1))
+                    * 0.01).astype(dtype)
+    mlp = []
+    prev = f * d
+    for h in cfg.mlp_layers:
+        mlp.append({
+            "w": (jax.random.normal(next(ks), (prev, h)) * math.sqrt(2.0 / prev)).astype(dtype),
+            "b": jnp.zeros((h,), dtype),
+        })
+        prev = h
+    p["mlp"] = mlp
+    p["mlp_out"] = (jax.random.normal(next(ks), (prev, 1)) * 0.01).astype(dtype)
+    return p
+
+
+def _field_ids(ids: jax.Array, cfg: XDeepFMConfig) -> jax.Array:
+    """Per-field ids -> global row ids in the fused table."""
+    offs = jnp.arange(cfg.n_sparse, dtype=ids.dtype) * cfg.rows_per_field
+    return ids + offs[None, :]
+
+
+def cin_layer_einsum(x0: jax.Array, xl: jax.Array, w: jax.Array) -> jax.Array:
+    """[B,F0,D] x [B,Fl,D] x [H,F0,Fl] -> [B,H,D] without materializing
+    the [B,F0,Fl,D] outer product (two-step contraction)."""
+    t = jnp.einsum("hij,bjd->bhid", w, xl)
+    return jnp.einsum("bhid,bid->bhd", t, x0)
+
+
+def forward(params: Params, ids: jax.Array, cfg: XDeepFMConfig) -> jax.Array:
+    """ids [B, F] int32 per-field categorical -> logits [B]."""
+    b, f = ids.shape
+    gids = _field_ids(ids, cfg)
+    emb = jnp.take(params["table"], gids.reshape(-1), axis=0)
+    emb = emb.reshape(b, f, cfg.embed_dim)                  # [B, F, D]
+
+    # linear term
+    lin = jnp.sum(jnp.take(params["linear"], gids.reshape(-1)).reshape(b, f), -1)
+
+    # CIN branch
+    if cfg.use_cin_kernel:
+        from repro.kernels import ops as kops
+        cin_fn = lambda xl, w: kops.cin_layer(emb, xl, w)
+    else:
+        cin_fn = lambda xl, w: cin_layer_einsum(emb, xl, w)
+    xl = emb
+    pooled = []
+    for lp in params["cin"]:
+        xl = cin_fn(xl, lp["w"])                            # [B, H, D]
+        pooled.append(jnp.sum(xl, axis=-1))                 # sum-pool over D
+    cin_feat = jnp.concatenate(pooled, axis=-1)             # [B, sum(H)]
+    cin_logit = (cin_feat @ params["cin_out"])[:, 0]
+
+    # DNN branch
+    h = emb.reshape(b, f * cfg.embed_dim)
+    for lp in params["mlp"]:
+        h = jax.nn.relu(h @ lp["w"] + lp["b"])
+    mlp_logit = (h @ params["mlp_out"])[:, 0]
+
+    return lin + cin_logit + mlp_logit + params["bias"]
+
+
+def loss_fn(params: Params, ids: jax.Array, labels: jax.Array,
+            cfg: XDeepFMConfig) -> jax.Array:
+    logits = forward(params, ids, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring: one query vs n_candidates (shape cell retrieval_cand)
+# ---------------------------------------------------------------------------
+
+def retrieval_scores(params: Params, query_ids: jax.Array,
+                     cand_emb: jax.Array, cfg: XDeepFMConfig) -> jax.Array:
+    """query_ids [1, F]; cand_emb [N, D_sum] -> scores [N].
+
+    The user tower reuses the DNN branch; candidates are scored with one
+    batched matvec (never a loop)."""
+    gids = _field_ids(query_ids, cfg)
+    emb = jnp.take(params["table"], gids.reshape(-1), axis=0)
+    h = emb.reshape(1, cfg.n_sparse * cfg.embed_dim)
+    for lp in params["mlp"]:
+        h = jax.nn.relu(h @ lp["w"] + lp["b"])
+    return (cand_emb @ h[0]).astype(jnp.float32)

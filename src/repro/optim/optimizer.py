@@ -1,0 +1,123 @@
+"""Optimizers + LR schedules (no external deps; optax-style pure pytrees).
+
+Includes the WSD (warmup-stable-decay) schedule from MiniCPM
+[arXiv:2404.06395] — assigned arch minicpm-2b trains with it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, warmup: int, total: int, floor: float = 0.1) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * lr + (1 - floor) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int,
+        floor: float = 0.01) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat plateau, then
+    exponential-style decay to ``floor * lr`` over ``decay`` steps."""
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * jnp.power(jnp.float32(floor), t)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, lr, dec))
+        return out.astype(jnp.float32)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# AdamW / SGD
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params: Params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads: Params, state: AdamWState, params: Params):
+        step = state.step + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g)) for g in jax.tree.leaves(gf)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, gf)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, gf)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.schedule(step)
+
+        def upd(p, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    schedule: Schedule
+    momentum: float = 0.9
+
+    def init(self, params: Params) -> SGDState:
+        return SGDState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(self, grads: Params, state: SGDState, params: Params):
+        step = state.step + 1
+        lr = self.schedule(step)
+        mom = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.momentum, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mom)
+        return new_params, SGDState(step, mom)

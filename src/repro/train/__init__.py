@@ -1,0 +1,3 @@
+from repro.train import checkpoint, elastic, loop, train_step
+
+__all__ = ["checkpoint", "elastic", "loop", "train_step"]

@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing: sharded-agnostic npz + JSON manifest.
+
+Design goals (DESIGN.md §5):
+  * exact resume — restoring mid-run reproduces the uninterrupted run
+    bit-for-bit (integration-tested);
+  * elastic — checkpoints carry logical (unsharded) arrays + the pytree
+    structure, so they restore onto any mesh/device count (elastic.py);
+  * atomic — write to ``<dir>/.tmp-<step>`` then rename; a crash mid-save
+    never corrupts the latest checkpoint;
+  * retention — keep the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any
+
+import numpy as np
+import jax
+
+SEP = "/"
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, jax.tree_util.tree_structure(tree)
+
+
+def _bitview_dtype(dtype) -> np.dtype:
+    return np.dtype({1: np.uint8, 2: np.uint16, 4: np.uint32,
+                     8: np.uint64}[dtype.itemsize])
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:  # ml_dtypes names (bfloat16, float8_e4m3fn, ...)
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
+         keep: int = 3) -> str:
+    """Atomically persist ``tree`` at ``step``. Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten(tree)
+    # npz cannot encode ml_dtypes (bf16 -> void); store a bit-view and
+    # record the logical dtype in the manifest for the restore path.
+    encoded = {}
+    for k, v in flat.items():
+        if v.dtype.kind not in "biufc":
+            v = v.view(_bitview_dtype(v.dtype))
+        encoded[k.replace(SEP, "|")] = v
+    np.savez(os.path.join(tmp, "arrays.npz"), **encoded)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` (optional pytree of NamedSharding)
+    re-shards on load — this is the elastic path."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like, treedef = _flatten(like)
+    missing = set(flat_like) - set(manifest["keys"])
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves_like))
+    out = []
+    for (pathk, leaf), sh in zip(leaves_like, shard_leaves):
+        flatk = SEP.join(_path_str(p) for p in pathk)
+        arr = data[flatk.replace(SEP, "|")]
+        logical = _np_dtype(manifest["dtypes"][flatk])
+        if arr.dtype != logical:
+            arr = arr.view(logical)  # undo the npz bit-view (bf16 etc.)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, manifest

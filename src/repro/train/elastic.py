@@ -1,0 +1,77 @@
+"""Elastic scaling + straggler policy (design + tested planning logic).
+
+Checkpoints store *logical* arrays (checkpoint.py), so elasticity reduces
+to re-planning shardings for the surviving mesh and re-device_put-ing on
+restore. This module owns that planning plus the monitor-group straggler
+policy.
+
+Straggler mitigation (monitor-quorum, DESIGN.md §5): gradient reduction is
+hierarchical (T3) — reduce-scatter within a group, cross-group reduce via
+monitors, gather within group. A straggling *group* therefore delays only
+the cross-group phase; the policy below decides, per step, whether to
+(a) wait, (b) proceed with the quorum and rescale the gradient sum by
+n_groups/n_reporting (bounded staleness), or (c) evict the group and
+re-plan the mesh. On real fleets (b) is the hot path; here the decision
+function + rescale math are unit-tested and the evict path reuses
+``plan_mesh``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = None,
+              pods: int = 1, axis_names=("data", "model")) -> tuple[int, ...]:
+    """Choose a (data, model) factorization for a (possibly shrunk) device
+    count: keep model-parallel degree as close to the original as divides."""
+    if model_parallel is None:
+        model_parallel = max(1, int(math.sqrt(n_devices)))
+    per_pod = n_devices // pods
+    while per_pod % model_parallel:
+        model_parallel //= 2
+    model_parallel = max(1, model_parallel)
+    data = per_pod // model_parallel
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)
+
+
+def reshard_restore(ckpt_dir: str, like, mesh: Mesh, sharding_fn,
+                    step: int | None = None):
+    """Restore a checkpoint onto a *different* mesh. ``sharding_fn(mesh)``
+    returns the pytree of NamedShardings for the new topology."""
+    from repro.train import checkpoint
+    return checkpoint.restore(ckpt_dir, like, step=step,
+                              shardings=sharding_fn(mesh))
+
+
+# ---------------------------------------------------------------------------
+# Straggler policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    quorum_frac: float = 0.75     # proceed when this many groups reported
+    wait_ms: float = 200.0        # grace period before quorum decision
+    evict_after: int = 50         # consecutive slow steps before eviction
+
+    def decide(self, n_groups: int, reported: int, slow_streak: int) -> str:
+        """-> 'wait' | 'proceed' | 'evict'."""
+        if reported == n_groups:
+            return "proceed"
+        if slow_streak >= self.evict_after:
+            return "evict"
+        if reported >= math.ceil(self.quorum_frac * n_groups):
+            return "proceed"
+        return "wait"
+
+    @staticmethod
+    def rescale(grad_sum, n_groups: int, reported: int):
+        """Unbiased rescale of a partial hierarchical reduction."""
+        return jax.tree.map(
+            lambda g: g * (n_groups / max(reported, 1)), grad_sum)

@@ -1,0 +1,59 @@
+"""Training-loop driver: data -> step -> metrics -> checkpoint cadence.
+
+Used by examples/ and launch/train.py. Deliberately framework-thin: the
+step function is already jitted by the caller; this owns restart logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.train import checkpoint
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    log_every: int = 10
+    keep: int = 3
+
+
+def run_loop(
+    cfg: LoopConfig,
+    params,
+    opt_state,
+    step_fn: Callable,            # (params, opt_state, batch) -> (p, s, loss)
+    batch_fn: Callable[[int], Any],
+    *,
+    log=print,
+) -> tuple[Any, Any, list[float]]:
+    start = 0
+    if cfg.ckpt_dir:
+        last = checkpoint.latest_step(cfg.ckpt_dir)
+        if last is not None:
+            state = {"params": params, "opt": opt_state}
+            state, manifest = checkpoint.restore(cfg.ckpt_dir, state)
+            params, opt_state = state["params"], state["opt"]
+            start = manifest["step"]
+            log(f"[loop] resumed from step {start}")
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start, cfg.total_steps):
+        batch = batch_fn(step)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+            lv = float(loss)
+            losses.append(lv)
+            dt = time.perf_counter() - t0
+            log(f"[loop] step {step} loss {lv:.4f} ({dt:.1f}s)")
+        if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
+            jax.block_until_ready(params)
+            checkpoint.save(cfg.ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state},
+                            keep=cfg.keep)
+    return params, opt_state, losses

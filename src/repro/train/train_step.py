@@ -1,0 +1,159 @@
+"""Train/serve step factories for every architecture family.
+
+Each factory returns a pure function suitable for ``jax.jit`` with
+explicit in/out shardings (the launcher and dryrun own the jit call).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn, recsys, transformer
+from repro.optim.optimizer import AdamW
+
+Params = Any
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [..., V] fp32; labels [...] int. Mean token NLL."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def make_lm_loss(cfg: transformer.LMConfig, policy=transformer.REPLICATED,
+                 aux_weight: float = 0.01):
+    def loss_fn(params, batch):
+        logits, aux = transformer.forward(params, batch["tokens"], cfg, policy)
+        return softmax_xent(logits, batch["labels"]) + aux_weight * aux
+    return loss_fn
+
+
+def make_lm_train_step(cfg: transformer.LMConfig, opt: AdamW,
+                       policy=transformer.REPLICATED, aux_weight: float = 0.01):
+    loss_fn = make_lm_loss(cfg, policy, aux_weight)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return step
+
+
+def make_lm_serve_step(cfg: transformer.LMConfig, policy=transformer.REPLICATED):
+    """Greedy single-token decode step (the decode_*/long_* shape cells)."""
+
+    def step(params, cache, tokens, pos):
+        logits, cache = transformer.decode_step(params, cache, tokens, pos, cfg, policy)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return step
+
+
+def make_lm_prefill(cfg: transformer.LMConfig, policy=transformer.REPLICATED):
+    """Full-sequence forward (prefill_* cells) — logits for the last token."""
+
+    def step(params, tokens):
+        logits, _ = transformer.forward(params, tokens, cfg, policy)
+        return logits[:, -1]
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def make_gnn_train_step(arch: str, cfg, opt: AdamW):
+    if arch == "gat":
+        def loss_fn(params, g, labels, mask):
+            logits = gnn.gat_forward(params, g, cfg)
+            nll = softmax_xent(logits.astype(jnp.float32), labels)
+            return nll
+    elif arch == "sage":
+        def loss_fn(params, g, labels, mask):
+            logits = gnn.sage_forward(params, g, cfg)
+            return softmax_xent(logits.astype(jnp.float32), labels)
+    else:
+        raise ValueError(arch)
+
+    def step(params, opt_state, g, labels, mask=None):
+        loss, grads = jax.value_and_grad(loss_fn)(params, g, labels, mask)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return step
+
+
+def make_sage_block_train_step(cfg: gnn.SAGEConfig, opt: AdamW):
+    def loss_fn(params, feats, blocks, labels):
+        logits = gnn.sage_forward_blocks(params, feats, blocks, cfg)
+        return softmax_xent(logits.astype(jnp.float32), labels)
+
+    def step(params, opt_state, feats, blocks, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, feats, blocks, labels)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return step
+
+
+def make_dimenet_train_step(cfg: gnn.DimeNetConfig, opt: AdamW, n_graphs: int):
+    def loss_fn(params, g, species, triplets, targets):
+        e = gnn.dimenet_energy(params, g, species, triplets, cfg, n_graphs)
+        return jnp.mean(jnp.square(e[:, 0] - targets))
+
+    def step(params, opt_state, g, species, triplets, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, g, species, triplets, targets)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return step
+
+
+def make_equiformer_train_step(cfg: gnn.EquiformerConfig, opt: AdamW):
+    def loss_fn(params, g, species, targets):
+        out = gnn.equiformer_forward(params, g, species, cfg)
+        return jnp.mean(jnp.square(out[:, 0] - targets))
+
+    def step(params, opt_state, g, species, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, g, species, targets)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def make_xdeepfm_train_step(cfg: recsys.XDeepFMConfig, opt: AdamW):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(recsys.loss_fn)(
+            params, batch["ids"], batch["labels"], cfg)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return step
+
+
+def make_xdeepfm_serve_step(cfg: recsys.XDeepFMConfig):
+    def step(params, ids):
+        return jax.nn.sigmoid(recsys.forward(params, ids, cfg))
+    return step
+
+
+def make_retrieval_step(cfg: recsys.XDeepFMConfig):
+    def step(params, query_ids, cand_emb):
+        return recsys.retrieval_scores(params, query_ids, cand_emb, cfg)
+    return step

@@ -1,0 +1,21 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def pytree_dataclass(cls=None, *, meta: tuple[str, ...] = ()):
+    """Frozen dataclass registered as a pytree with static ``meta`` fields."""
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        fields = [f.name for f in dataclasses.fields(c)]
+        data_fields = [f for f in fields if f not in meta]
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=list(meta)
+        )
+        return c
+
+    return wrap if cls is None else wrap(cls)

@@ -1,0 +1,93 @@
+"""Topology hop model + monitor election (paper §4.3, Fig. 15/16 logic)."""
+import numpy as np
+import pytest
+
+from repro.comms.topology import (
+    DEFAULT_FANOUTS, MonitorPlan, TreeTopology, elect_monitors,
+    simulate_messages,
+)
+
+
+@pytest.fixture
+def topo():
+    return TreeTopology((4, 8, 4, 4))  # 512 nodes, groups of 4
+
+
+def test_level_structure(topo):
+    assert topo.n_nodes == 512
+    assert topo.group_size == 4
+    # same node
+    assert topo.level(5, 5) == 0
+    # same router group (0..3)
+    assert topo.level(0, 3) == 1
+    # same switchboard, different router
+    assert topo.level(0, 4) == 2
+    assert topo.level(0, 31) == 2
+    # different switchboard, same BoB
+    assert topo.level(0, 32) == 3
+    # different BoB / cabinet
+    assert topo.level(0, 128) == 4
+
+
+def test_hops_monotone_in_level(topo):
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 512, 1000)
+    b = rng.integers(0, 512, 1000)
+    lvl = topo.level(a, b)
+    hops = topo.hops(a, b)
+    assert np.all(hops[lvl == 0] == 0)
+    assert np.all(hops[lvl > 0] == 2 * lvl[lvl > 0] - 1)
+    # eq.5 breakdown sums to total hops
+    bd = topo.hop_breakdown(a, b)
+    total = sum(bd.values())
+    np.testing.assert_array_equal(total, hops)
+
+
+def test_most_messages_multi_hop(topo):
+    """Paper: 'over 95% messages would roam more than one networking hop'."""
+    src, dst = simulate_messages(20000, topo, seed=1)
+    frac_multi = float(np.mean(topo.hops(src, dst) > 1))
+    assert frac_multi > 0.9
+
+
+@pytest.mark.parametrize("policy", ["random", "heaviest", "orchestra"])
+def test_election_one_monitor_per_group(topo, policy):
+    rng = np.random.default_rng(2)
+    w = rng.pareto(1.5, topo.n_nodes)
+    plan = elect_monitors(topo, w, policy, seed=3)
+    assert plan.monitors.shape == (topo.n_groups,)
+    for g, m in enumerate(plan.monitors):
+        assert topo.group_of(m) == g
+
+
+def test_monitor_routing_reduces_batched_hops(topo):
+    """Fig. 16: group-based monitor comm cuts accumulated hops vs naive."""
+    rng = np.random.default_rng(4)
+    w = rng.pareto(1.5, topo.n_nodes)
+    src, dst = simulate_messages(5000, topo, seed=5, skew=w)
+    naive = float(np.sum(topo.hops(src, dst)))
+    results = {}
+    for policy in ("random", "heaviest", "orchestra"):
+        plan = elect_monitors(topo, w, policy, seed=6)
+        results[policy] = plan.batched_route_hops(src, dst)
+    # batching must beat naive for every policy
+    for policy, hops in results.items():
+        assert hops < naive, (policy, hops, naive)
+    # orchestra <= heaviest (coordinate descent starts from heaviest)
+    assert results["orchestra"] <= results["heaviest"] * 1.001
+
+
+def test_unbatched_monitor_path_never_shorter_than_direct_per_message(topo):
+    # per-message the monitor detour adds hops; the win comes from batching
+    rng = np.random.default_rng(7)
+    w = rng.pareto(1.5, topo.n_nodes)
+    plan = elect_monitors(topo, w, "orchestra", seed=8)
+    src, dst = simulate_messages(2000, topo, seed=9)
+    direct = topo.hops(src, dst)
+    routed = plan.route_hops(src, dst)
+    same_group = topo.group_of(src) == topo.group_of(dst)
+    assert np.all(routed[same_group] == direct[same_group])
+
+
+def test_small_system_group_of(topo):
+    assert list(topo.group_of(np.array([0, 3, 4, 511]))) == [0, 0, 1, 127]

@@ -1,0 +1,87 @@
+"""Data pipeline: determinism, sampler block invariants."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import build_csr, generate_edges
+from repro.data import synthetic as S
+from repro.data.graphs import build_triplets, make_feature_graph, make_molecule_batch
+from repro.data.sampler import NeighborSampler, static_block_specs
+
+
+def test_lm_batch_deterministic_and_bounded():
+    a = S.lm_batch(1, 5, 4, 32, 1000)
+    b = S.lm_batch(1, 5, 4, 32, 1000)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = S.lm_batch(1, 6, 4, 32, 1000)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    assert int(jnp.max(a["tokens"])) < 1000
+    # next-token alignment
+    full_a = np.asarray(a["tokens"])[:, 1:]
+    np.testing.assert_array_equal(full_a, np.asarray(a["labels"])[:, :-1])
+
+
+def test_recsys_batch_skew():
+    b = S.recsys_batch(0, 0, 4096, 10, 10000)
+    ids = np.asarray(b["ids"])
+    assert (ids < 10000).all() and (ids >= 0).all()
+    # power-law: id 0 much more frequent than median id
+    frac0 = (ids == 0).mean()
+    assert frac0 > 0.05
+
+
+def test_neighbor_sampler_blocks_consistent():
+    edges = generate_edges(2, 9)
+    g = build_csr(edges)
+    ro, ci = np.asarray(g.row_offsets), np.asarray(g.col_indices)
+    samp = NeighborSampler(ro, ci, (4, 3), seed=0)
+    seeds = np.array([1, 2, 3, 4, 5, 6, 7, 8])
+    batch = samp.sample(seeds)
+    assert len(batch.blocks) == 2
+    np.testing.assert_array_equal(batch.node_ids[:8], seeds)
+    n_total = len(batch.node_ids)
+    # blocks outer-first; edges index within the node set (prefix property)
+    for blk in batch.blocks:
+        src = np.asarray(blk["src"])
+        dst = np.asarray(blk["dst"])
+        valid = np.asarray(blk["valid"])
+        assert src[valid].max(initial=0) < n_total
+        assert dst[valid].max(initial=0) < blk["n_dst"]
+        # every sampled edge is a real graph edge
+        for s_, d_ in zip(src[valid][:50], dst[valid][:50]):
+            u = batch.node_ids[s_]
+            v = batch.node_ids[d_]
+            row = ci[ro[v]:ro[v + 1]]
+            assert u in row, (u, v)
+
+
+def test_static_block_specs_worst_case():
+    specs, total = static_block_specs(4, (3, 2))
+    # inner spec (last hop first): s1 = 4*(1+3) = 16 rows, 32 edges
+    assert specs[0] == {"n_dst": 16, "n_edges": 32}
+    assert specs[1] == {"n_dst": 4, "n_edges": 12}
+    assert total == 48
+
+
+def test_feature_graph_labels_match_features():
+    g, labels = make_feature_graph(0, 7, d_feat=8, n_classes=3, edge_factor=4)
+    assert g.node_feat.shape == (g.n_nodes, 8)
+    assert int(jnp.max(labels)) < 3
+
+
+def test_molecule_batch_and_triplets():
+    g, species, tri = make_molecule_batch(0, n_mols=3, nodes_per_mol=6,
+                                          edges_per_mol=10)
+    assert g.n_nodes == 18
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    gid = np.asarray(g.graph_ids)
+    # edges never cross molecules
+    np.testing.assert_array_equal(gid[src], gid[dst])
+    # triplets share the pivot: src(t_out) == dst(t_in)... by construction
+    t_in = np.asarray(tri["t_in"])
+    t_out = np.asarray(tri["t_out"])
+    valid = np.asarray(tri["valid"])
+    np.testing.assert_array_equal(src[t_out[valid]], src[t_in[valid]])
+    ang = np.asarray(tri["angle"])[valid]
+    assert (ang >= 0).all() and (ang <= np.pi + 1e-6).all()

@@ -1,0 +1,208 @@
+"""Core Graph500 pipeline: generator, construction, reorder, heavy core,
+hybrid BFS vs independent host oracle, spec validation."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Graph500Config, build, build_csr, build_heavy_core, degree_reorder,
+    edge_view, generate_edges, hybrid_bfs, pack_bitmap, run, sample_roots,
+    unpack_bitmap, validate,
+)
+from repro.core.graph_build import csr_to_edge_arrays
+from repro.core.heavy import heavy_count
+from repro.core.heavy import testbit as bit_at  # alias: pytest must not collect
+from repro.core.reorder import relabel_edges, sort_host
+from repro.core.reference import reference_bfs
+from repro.core.teps import traversed_edges
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    edges = generate_edges(3, 10)
+    g = build_csr(edges)
+    return edges, g
+
+
+def test_kronecker_shapes_and_determinism():
+    e1 = generate_edges(7, 9)
+    e2 = generate_edges(7, 9)
+    assert e1.num_edges == 16 << 9
+    assert e1.num_vertices == 512
+    np.testing.assert_array_equal(np.asarray(e1.src), np.asarray(e2.src))
+    assert int(jnp.max(e1.src)) < 512 and int(jnp.min(e1.src)) >= 0
+
+
+def test_kronecker_quadrant_skew():
+    # A=0.57 concentrates mass at low ids: low half must dominate
+    e = generate_edges(0, 12)
+    frac_low = float(jnp.mean((e.src < 2048).astype(jnp.float32)))
+    assert frac_low > 0.6
+
+
+def test_csr_structure(small_graph):
+    edges, g = small_graph
+    ro = np.asarray(g.row_offsets)
+    assert ro[0] == 0 and ro[-1] == int(g.nnz)
+    assert np.all(np.diff(ro) >= 0)
+    assert np.all(np.diff(ro) == np.asarray(g.degree))
+    # symmetric: every valid (s,d) has (d,s)
+    src, dst, valid = (np.asarray(x) for x in csr_to_edge_arrays(g))
+    v = g.num_vertices
+    fwd = {(a, b) for a, b, ok in zip(src, dst, valid) if ok}
+    assert all((b, a) in fwd for (a, b) in fwd)
+    # dedupe: no duplicates
+    assert len(fwd) == int(g.nnz)
+    # no self loops
+    assert all(a != b for a, b in fwd)
+
+
+def test_degree_reorder_is_permutation_sorted_desc(small_graph):
+    _, g = small_graph
+    r = degree_reorder(g.degree)
+    old_from_new = np.asarray(r.old_from_new)
+    assert sorted(old_from_new.tolist()) == list(range(g.num_vertices))
+    ds = np.asarray(r.degree_sorted)
+    assert np.all(np.diff(ds) <= 0)
+    # isolated tail
+    n_active = int(r.n_active)
+    assert np.all(ds[:n_active] > 0)
+    assert np.all(ds[n_active:] == 0)
+    # new_from_old inverts old_from_new
+    nfo = np.asarray(r.new_from_old)
+    np.testing.assert_array_equal(nfo[old_from_new], np.arange(g.num_vertices))
+
+
+def test_relabel_preserves_graph(small_graph):
+    edges, g = small_graph
+    r = degree_reorder(g.degree)
+    e2 = relabel_edges(edges, r)
+    g2 = build_csr(e2)
+    assert int(g2.nnz) == int(g.nnz)
+    # degree multiset preserved
+    assert sorted(np.asarray(g2.degree).tolist()) == \
+        sorted(np.asarray(g.degree).tolist())
+
+
+def test_host_sorts_agree():
+    rng = np.random.default_rng(0)
+    deg = rng.integers(0, 50, size=200)
+    perms = {alg: sort_host(deg, alg) for alg in ("merge", "quick", "bubble", "xla")}
+    for alg, perm in perms.items():
+        assert np.all(np.diff(deg[perm]) <= 0), alg
+    # merge is stable: equal keys keep index order
+    pm = perms["merge"]
+    for i in range(len(pm) - 1):
+        if deg[pm[i]] == deg[pm[i + 1]]:
+            assert pm[i] < pm[i + 1]
+
+
+def test_heavy_core_eq4_invariant():
+    """{column} = {buffer_column} ∪ {rest_column}, disjoint (paper eq. 4)."""
+    edges = generate_edges(5, 11)
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)
+    g = build_csr(relabel_edges(edges, r))
+    core = build_heavy_core(g, threshold=8)
+    src, dst, valid = (np.asarray(x) for x in csr_to_edge_arrays(g))
+    k = core.k
+    a = np.asarray(core.a_core)
+    halo_valid = np.asarray(core.halo_valid)
+    in_core_count = 0
+    for s, d, ok in zip(src, dst, valid):
+        if not ok or s >= k:
+            continue
+        if d < k:
+            word = a[s, d // 32]
+            assert (word >> (d % 32)) & 1 == 1
+            in_core_count += 1
+    assert in_core_count == int(core.core_nnz)
+    # halo and core partition the core-row edges
+    n_core_rows_edges = sum(1 for s, ok in zip(src, valid) if ok and s < k)
+    assert in_core_count + int(halo_valid.sum()) == n_core_rows_edges
+    # heavy count consistent with threshold
+    deg_sorted = np.asarray(g.degree)
+    assert int(heavy_count(g.degree, 8)) == int((deg_sorted >= 8).sum())
+
+
+def test_bitmap_pack_unpack_roundtrip():
+    rng = np.random.default_rng(3)
+    mask = jnp.asarray(rng.random(1000) < 0.3)
+    bm = pack_bitmap(mask, 32)
+    back = unpack_bitmap(bm, 1000)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+    idx = jnp.asarray(rng.integers(0, 1000, 100))
+    np.testing.assert_array_equal(
+        np.asarray(bit_at(bm, idx)), np.asarray(mask)[np.asarray(idx)])
+
+
+@pytest.mark.parametrize("engine,threshold", [
+    ("reference", None), ("bitmap", 8), ("bitmap", 4)])
+@pytest.mark.parametrize("scale", [8, 10])
+def test_hybrid_bfs_matches_host_oracle(engine, threshold, scale):
+    edges = generate_edges(11, scale)
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)
+    g = build_csr(relabel_edges(edges, r))
+    core = build_heavy_core(g, threshold=threshold) if threshold else None
+    ev = edge_view(g)
+    ro, ci = np.asarray(g.row_offsets), np.asarray(g.col_indices)
+    for root in (0, 3, 17):
+        res = hybrid_bfs(ev, g.degree, root, core=core, engine=engine)
+        _, l_ref = reference_bfs(ro, ci, root)
+        np.testing.assert_array_equal(np.asarray(res.level), l_ref,
+                                      err_msg=f"root={root}")
+        val = validate(ev, res, jnp.int32(root))
+        assert bool(val.ok), {k: bool(getattr(val, k)) for k in val._fields}
+
+
+def test_hybrid_switches_direction():
+    edges = generate_edges(5, 12)
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)
+    g = build_csr(relabel_edges(edges, r))
+    ev = edge_view(g)
+    res = hybrid_bfs(ev, g.degree, 0, alpha=14.0, beta=24.0)
+    dirs = np.asarray(res.stats.direction)[: int(res.stats.levels)]
+    assert 0 in dirs and 1 in dirs, dirs  # both directions used
+
+
+def test_validation_catches_corruption():
+    edges = generate_edges(13, 8)
+    g = build_csr(edges)
+    ev = edge_view(g)
+    res = hybrid_bfs(ev, g.degree, 1)
+    ok = validate(ev, res, jnp.int32(1))
+    assert bool(ok.ok)
+    # corrupt: point a visited vertex at a non-neighbor
+    parent = np.asarray(res.parent).copy()
+    visited = np.where(parent >= 0)[0]
+    victim = visited[-1]
+    if victim != 1:
+        parent[victim] = victim  # self-parent non-root -> depth check fails
+        bad = res._replace(parent=jnp.asarray(parent))
+        assert not bool(validate(ev, bad, jnp.int32(1)).ok)
+    # corrupt level parity
+    level = np.asarray(res.level).copy()
+    if len(visited) > 2:
+        level[visited[2]] += 1
+        bad = res._replace(level=jnp.asarray(level))
+        assert not bool(validate(ev, bad, jnp.int32(1)).ok)
+
+
+def test_end_to_end_pipeline_ladder():
+    for rung in ("reference-3.0.0", "th2", "pre-g500"):
+        cfg = Graph500Config.ladder(rung, scale=9, n_roots=2)
+        built, result = run(cfg)
+        assert result.all_valid, rung
+        assert result.harmonic_mean_teps > 0, rung
+
+
+def test_traversed_edges_counts_component():
+    edges = generate_edges(17, 9)
+    g = build_csr(edges)
+    ev = edge_view(g)
+    res = hybrid_bfs(ev, g.degree, int(np.asarray(sample_roots(0, edges, 1))[0]))
+    m = int(traversed_edges(g.degree, res))
+    assert 0 < m <= int(g.nnz) // 2

@@ -1,0 +1,253 @@
+"""Model-zoo behaviour: per-arch smoke (reduced configs, CPU, one step),
+decode-vs-forward consistency, MoE routing invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_ids, get
+from repro.data import graphs as G
+from repro.data import synthetic as S
+from repro.data.sampler import NeighborSampler
+from repro.models import gnn, layers, moe, recsys, transformer as T
+from repro.optim import AdamW, constant, cosine, wsd
+from repro.train import train_step as TS
+
+OPT = AdamW(constant(1e-3))
+
+LM_ARCHS = [a for a in all_arch_ids() if get(a).family == "lm"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = get(arch).make_smoke_config()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    state = OPT.init(params)
+    step = jax.jit(TS.make_lm_train_step(cfg, OPT))
+    batch = S.lm_batch(0, 0, 2, 16, cfg.vocab)
+    p2, s2, loss = step(params, state, batch)
+    assert np.isfinite(float(loss))
+    logits, _ = T.forward(p2, batch["tokens"], cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "granite-moe-1b-a400m"])
+def test_lm_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce full-forward logits.
+
+    MoE capacity is batch-size dependent (GShard semantics), so the MoE
+    arch runs with a capacity factor large enough that neither the
+    full-sequence nor the single-token routing drops tokens."""
+    cfg = get(arch).make_smoke_config()
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    toks = S.lm_batch(1, 0, 2, 8, cfg.vocab)["tokens"]
+    full_logits, _ = T.forward(params, toks, cfg)
+    cache = T.init_cache(cfg, 2, 8)
+    outs = []
+    for t in range(8):
+        lg, cache = T.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg)
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32), np.asarray(full_logits, np.float32),
+        rtol=3e-2, atol=3e-2)  # bf16 matmul accumulation differences
+
+
+def test_sliding_window_masks_far_context():
+    cfg = dataclasses.replace(get("olmo-1b").make_smoke_config(), window=4)
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    toks = S.lm_batch(2, 0, 1, 12, cfg.vocab)["tokens"]
+    lg_w, _ = T.forward(params, toks, cfg)
+    # perturbing a token outside the window must not change the last logit
+    toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 1) % cfg.vocab)
+    lg_w2, _ = T.forward(params, toks2, cfg)
+    np.testing.assert_allclose(np.asarray(lg_w[0, -1], np.float32),
+                               np.asarray(lg_w2[0, -1], np.float32),
+                               rtol=1e-5, atol=1e-5)
+    # and with full attention it must change
+    cfg_full = dataclasses.replace(cfg, window=None)
+    lg_f, _ = T.forward(params, toks, cfg_full)
+    lg_f2, _ = T.forward(params, toks2, cfg_full)
+    assert not np.allclose(np.asarray(lg_f[0, -1], np.float32),
+                           np.asarray(lg_f2[0, -1], np.float32), atol=1e-6)
+
+
+def test_moe_router_respects_capacity_and_gates():
+    dims = moe.MoEDims(d_model=16, d_ff=32, n_experts=4, top_k=2,
+                       capacity_factor=1.0)
+    key = jax.random.PRNGKey(3)
+    p = moe.init_moe(key, dims)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 16),
+                          dtype=jnp.bfloat16)
+    out, aux = moe.moe_ffn(p, x, dims)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    assert float(aux) > 0.5  # Switch aux loss ~1 for near-uniform routing
+    # capacity: internal slot ids bounded — exercised via zero-drop check:
+    # with huge capacity, outputs must be a convex combination per token
+    dims_big = dataclasses.replace(dims, capacity_factor=8.0)
+    out2, _ = moe.moe_ffn(p, x, dims_big)
+    assert np.isfinite(np.asarray(out2, np.float32)).all()
+
+
+def test_moe_capacity_drops_tokens_deterministically():
+    dims = moe.MoEDims(d_model=8, d_ff=16, n_experts=2, top_k=1,
+                       capacity_factor=0.25)
+    p = moe.init_moe(jax.random.PRNGKey(4), dims)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 16, 8), dtype=jnp.bfloat16)
+    o1, _ = moe.moe_ffn(p, x, dims)
+    o2, _ = moe.moe_ffn(p, x, dims)
+    np.testing.assert_array_equal(np.asarray(o1, np.float32),
+                                  np.asarray(o2, np.float32))
+
+
+def test_gqa_attention_shapes_and_grouping():
+    dims = layers.AttnDims(d_model=32, n_heads=8, n_kv_heads=2, head_dim=4)
+    p = layers.init_attention(jax.random.PRNGKey(6), dims)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 10, 32), dtype=jnp.bfloat16)
+    out = layers.attention(p, x, dims)
+    assert out.shape == (2, 10, 32)
+    # causality: future token perturbation cannot change past outputs
+    x2 = x.at[:, -1].add(1.0)
+    o2 = layers.attention(p, x2, dims)
+    np.testing.assert_allclose(np.asarray(out[:, :-1], np.float32),
+                               np.asarray(o2[:, :-1], np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_rope_relative_shift_property():
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 6, 1, 8))
+    p0 = jnp.arange(6)[None]
+    p5 = p0 + 5
+    r0 = layers.apply_rope(x, p0)
+    r5 = layers.apply_rope(x, p5)
+    # norms preserved (rotation)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r0)),
+                               np.linalg.norm(np.asarray(x)), rtol=1e-5)
+    # inner products depend only on relative distance
+    q = np.asarray(r0)[0, :, 0]
+    k = np.asarray(r5)[0, :, 0]
+    d1 = q[0] @ q[3]
+    d2 = np.asarray(layers.apply_rope(x, p0 + 100))[0, 0, 0] @ \
+        np.asarray(layers.apply_rope(x, p0 + 100))[0, 3, 0]
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)
+
+
+GNN_ARCHS = [a for a in all_arch_ids() if get(a).family == "gnn"]
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke(arch):
+    cfg = get(arch).make_smoke_config()
+    if arch in ("gat-cora", "graphsage-reddit"):
+        g, labels = G.make_feature_graph(0, 7, d_feat=cfg.d_in,
+                                         n_classes=cfg.n_classes, edge_factor=4)
+        if arch == "gat-cora":
+            p = gnn.gat_init(jax.random.PRNGKey(0), cfg)
+            out = gnn.gat_forward(p, g, cfg)
+            assert out.shape == (g.n_nodes, cfg.n_classes)
+        else:
+            p = gnn.sage_init(jax.random.PRNGKey(0), cfg)
+            out = gnn.sage_forward(p, g, cfg)
+            assert out.shape == (g.n_nodes, cfg.n_classes)
+    else:
+        g, species, tri = G.make_molecule_batch(0, 4, 8, 16)
+        if arch == "dimenet":
+            p = gnn.dimenet_init(jax.random.PRNGKey(0), cfg)
+            e = gnn.dimenet_energy(p, g, species, tri, cfg, n_graphs=4)
+            assert e.shape == (4, cfg.n_targets)
+            out = e
+        else:
+            p = gnn.equiformer_init(jax.random.PRNGKey(0), cfg)
+            out = gnn.equiformer_forward(p, g, species, cfg)
+            assert out.shape == (g.n_nodes, cfg.n_targets)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+def test_gat_attention_normalizes():
+    cfg = get("gat-cora").make_smoke_config()
+    g, _ = G.make_feature_graph(1, 6, d_feat=cfg.d_in, edge_factor=4)
+    n = g.n_nodes
+    z = jnp.ones((len(np.asarray(g.edge_src)), 3))
+    seg = jnp.where(g.edge_valid, g.edge_dst, n)
+    alpha = gnn.segment_softmax(
+        jnp.where(g.edge_valid[:, None], 0.0, -jnp.inf) + z * 0, seg, n)
+    sums = jax.ops.segment_sum(alpha, seg, num_segments=n + 1)[:n]
+    deg = np.asarray(jax.ops.segment_sum(
+        g.edge_valid.astype(jnp.int32), seg, num_segments=n + 1)[:n])
+    s = np.asarray(sums)[:, 0]
+    np.testing.assert_allclose(s[deg > 0], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(s[deg == 0], 0.0, atol=1e-7)
+
+
+def test_equiformer_channel_layout():
+    cfg = gnn.EquiformerConfig(l_max=6, m_max=2)
+    assert cfg.n_sph == 29  # 1+3+5+5+5+5+5
+    cfg2 = gnn.EquiformerConfig(l_max=2, m_max=1)
+    assert cfg2.n_sph == 1 + 3 + 3
+
+
+def test_xdeepfm_smoke_and_embedding_bag():
+    cfg = get("xdeepfm").make_smoke_config()
+    p = recsys.init_params(jax.random.PRNGKey(0), cfg)
+    b = S.recsys_batch(0, 0, 16, cfg.n_sparse, cfg.rows_per_field)
+    logits = recsys.forward(p, b["ids"], cfg)
+    assert logits.shape == (16,)
+    assert np.isfinite(np.asarray(logits)).all()
+    # embedding_bag: sum mode equals manual gather-sum
+    table = jax.random.normal(jax.random.PRNGKey(1), (32, 4))
+    ids = jnp.array([0, 1, 5, 5, 7])
+    bags = jnp.array([0, 0, 1, 1, 2])
+    out = recsys.embedding_bag(table, ids, bags, 3)
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.asarray(table[0] + table[1]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               np.asarray(2 * table[5]), rtol=1e-6)
+    mean = recsys.embedding_bag(table, ids, bags, 3, mode="mean")
+    np.testing.assert_allclose(np.asarray(mean[2]), np.asarray(table[7]),
+                               rtol=1e-6)
+
+
+def test_retrieval_scores_batched_dot():
+    cfg = get("xdeepfm").make_smoke_config()
+    p = recsys.init_params(jax.random.PRNGKey(0), cfg)
+    q = jnp.zeros((1, cfg.n_sparse), jnp.int32)
+    cand = jax.random.normal(jax.random.PRNGKey(2), (64, cfg.mlp_layers[-1]))
+    scores = TS.make_retrieval_step(cfg)(p, q, cand)
+    assert scores.shape == (64,)
+
+
+def test_wsd_schedule_phases():
+    f = wsd(1.0, warmup=10, stable=20, decay=10, floor=0.01)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(f(jnp.int32(25))) - 1.0) < 1e-6
+    assert float(f(jnp.int32(40))) <= 0.011
+    c = cosine(1.0, 10, 100)
+    assert float(c(jnp.int32(100))) <= 0.12
+
+
+def test_q_chunked_attention_exact():
+    """§Perf cell D: exact query-chunked attention == full attention."""
+    dims = layers.AttnDims(d_model=64, n_heads=8, n_kv_heads=2, head_dim=8)
+    p = layers.init_attention(jax.random.PRNGKey(10), dims)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 64, 64),
+                          dtype=jnp.bfloat16)
+    full = np.asarray(layers.attention(p, x, dims), np.float32)
+    for qc in (8, 16, 32):
+        ch = np.asarray(layers.attention(p, x, dims, q_chunk=qc), np.float32)
+        np.testing.assert_allclose(ch, full, rtol=1e-2, atol=1e-2)
+    un = np.asarray(layers.attention(p, x, dims, q_chunk=16,
+                                     unroll_chunks=True), np.float32)
+    np.testing.assert_allclose(un, full, rtol=1e-2, atol=1e-2)
+    # windowed + chunked compose
+    w = np.asarray(layers.attention(p, x, dims, window=8), np.float32)
+    wc = np.asarray(layers.attention(p, x, dims, window=8, q_chunk=16),
+                    np.float32)
+    np.testing.assert_allclose(wc, w, rtol=1e-2, atol=1e-2)
