@@ -1,64 +1,96 @@
-"""Paper Fig. 10/11: single-node BFS performance.
+"""Paper Fig. 10/11: single-node BFS performance + the resident-loop ladder.
 
 Rungs measured (CPU wall clock; absolute GTEPS are NOT comparable to
 Matrix-2000+ — the *relative ladder* is the reproduction target):
 
   reference-3.0.0 : sequential numpy queue BFS ("just make then run")
   xla             : edge-parallel relax engine under jit (thread-parallel)
-  avla            : bitmap engine, default kernel tiles (compiler-chosen
+  avla            : dense-core Pallas kernel, default tile (compiler-chosen
                     vector shape — interpret-mode Pallas on CPU)
-  avls            : bitmap engine, hand-tuned rows_per_tile (the
+  avls            : dense-core Pallas kernel, hand-tuned rows_per_tile (the
                     vector-length-specified mode)
+  legacy_engine   : the seed customized loop — bool frontier, per-level
+                    bitmap round trip, all-edges top-down (the "before")
+  bitmap_engine   : the bitmap-resident loop — packed frontier/visited
+                    across the whole while_loop, fused frontier_update
+                    epilogue, chunked frontier-proportional top-down
+  bitmap_nocore   : the resident loop without the dense core (isolates the
+                    chunked top-down win from Pallas interpret overhead)
+  batch64         : all 64 Graph500 search keys in ONE jitted program
 
-AVLA/AVLS differ exactly like the paper's two SVE modes: tile shape is
-the Pallas analogue of vector length.
+Scales default to (10,) fast / (10, 12) full; set ``BENCH_SCALES=14`` (comma
+list) to override — the CI smoke run uses that for the scale-14 check.
+
+The module also fills a machine-readable payload (``json_payload()``) that
+``benchmarks/run.py`` writes to ``BENCH_bfs.json`` at the repo root: engine
+wall-clock + TEPS, per-level breakdown (direction, frontier, scanned edges,
+scanned chunks), and the before/after speedup of the resident loop.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import FAST, row, timed
 from repro.core import (
-    build_csr, build_heavy_core, degree_reorder, edge_view, generate_edges,
-    hybrid_bfs, traversed_edges,
+    build_csr, build_heavy_core, chunk_edge_view, degree_reorder,
+    edge_view, generate_edges, hybrid_bfs, sample_roots, traversed_edges,
 )
+from repro.core.heavy import pack_bitmap
 from repro.core.reference import reference_bfs
 from repro.core.reorder import relabel_edges
+from repro.core.teps import run_graph500_batched
 from repro.kernels.frontier_spmv import core_spmv
+
+_PAYLOAD: dict = {}
+
+
+def json_payload() -> dict:
+    return _PAYLOAD
+
+
+def _scales() -> tuple[int, ...]:
+    env = os.environ.get("BENCH_SCALES")
+    if env:
+        return tuple(int(s) for s in env.split(",") if s.strip())
+    return (10,) if FAST else (10, 12)
 
 
 def run():
     rows = []
-    scales = (10,) if FAST else (10, 12)
-    for scale in scales:
+    for scale in _scales():
         edges = generate_edges(1, scale)
         g0 = build_csr(edges)
         r = degree_reorder(g0.degree)
         g = build_csr(relabel_edges(edges, r))
         ev = edge_view(g)
-        core = build_heavy_core(g, threshold=8)
+        chunks = chunk_edge_view(ev)
+        threshold = 100 if scale >= 13 else 8
+        core = build_heavy_core(g, threshold=threshold)
         ro, ci = np.asarray(g.row_offsets), np.asarray(g.col_indices)
         root = 0
         res = hybrid_bfs(ev, g.degree, root)
         m = int(traversed_edges(g.degree, res))
+        engines: dict[str, dict] = {}
+
+        def record(name, t_s, extra=""):
+            engines[name] = {"us_per_call": t_s * 1e6, "teps": m / t_s}
+            rows.append(row(f"bfs_single/scale{scale}/{name}", t_s * 1e6,
+                            f"GTEPS={m / t_s / 1e9:.5f}{extra}"))
 
         t0 = time.perf_counter()
         reference_bfs(ro, ci, root)
-        t_ref = time.perf_counter() - t0
-        rows.append(row(f"bfs_single/scale{scale}/reference-3.0.0",
-                        t_ref * 1e6, f"GTEPS={m / t_ref / 1e9:.5f}"))
+        record("reference-3.0.0", time.perf_counter() - t0)
 
-        t_xla = timed(lambda: hybrid_bfs(ev, g.degree, root).parent)
-        rows.append(row(f"bfs_single/scale{scale}/xla",
-                        t_xla * 1e6, f"GTEPS={m / t_xla / 1e9:.5f}"))
+        record("xla", timed(lambda: hybrid_bfs(ev, g.degree, root).parent))
 
         for mode, rpt in (("avla", 8), ("avls", 32)):
             # kernel-tile mode enters through rows_per_tile; run the dense
             # core level directly to isolate the SVE-analogue effect.
-            from repro.core.heavy import pack_bitmap
             f_bm = pack_bitmap(jnp.zeros((core.k,), bool).at[0].set(True),
                                core.k // 32)
             t_k = timed(lambda: core_spmv(core.a_core, f_bm,
@@ -67,10 +99,92 @@ def run():
             rows.append(row(
                 f"bfs_single/scale{scale}/{mode}(rows={rpt})", t_k * 1e6,
                 f"core_bits_per_s={bits / t_k:.3g}"))
-        t_bfs_k = timed(lambda: hybrid_bfs(ev, g.degree, root, core=core,
-                                           engine="bitmap").parent)
-        rows.append(row(f"bfs_single/scale{scale}/bitmap_engine",
-                        t_bfs_k * 1e6,
-                        f"GTEPS={m / t_bfs_k / 1e9:.5f};"
-                        "note=interpret-mode Pallas (CPU) — see DESIGN.md §8"))
+
+        # Before/after pair measured *interleaved* so background load drift
+        # hits both engines equally — their ratio is the tracked number.
+        fn_leg = lambda: hybrid_bfs(ev, g.degree, root, core=core,
+                                    engine="legacy").parent
+        fn_bm = lambda: hybrid_bfs(ev, g.degree, root, core=core,
+                                   engine="bitmap", chunks=chunks).parent
+        jax.block_until_ready(fn_leg())
+        jax.block_until_ready(fn_bm())
+        t_legs, t_bms = [], []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn_leg())
+            t_legs.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn_bm())
+            t_bms.append(time.perf_counter() - t0)
+        note = ";note=interpret-mode Pallas (CPU) — see DESIGN.md §8"
+        record("legacy_engine", float(np.median(t_legs)), note)
+        record("bitmap_engine", float(np.median(t_bms)), note)
+        record("bitmap_nocore",
+               timed(lambda: hybrid_bfs(ev, g.degree, root, engine="bitmap",
+                                        chunks=chunks).parent))
+
+        # --- Graph500-spec batched harness: 64 keys, one jitted program ---
+        # Timed once inside run_graph500_batched (the fused program is too
+        # expensive on interpret-mode CPU for repeat timing), and skipped
+        # above BENCH_BATCH_SCALE_MAX: under vmap, chunk skipping becomes
+        # masking, so the batch scans all edges for all roots every level
+        # (fine on a real TPU backend; see ROADMAP open items).
+        batch_scale_max = int(os.environ.get("BENCH_BATCH_SCALE_MAX", "14"))
+        batch_payload: dict = {"skipped": True,
+                               "reason": f"scale>{batch_scale_max} on "
+                                         "interpret-mode backend"}
+        if scale <= batch_scale_max:
+            roots = np.asarray(sample_roots(1, edges, 64))
+            roots = np.asarray(r.new_from_old)[roots]
+            g500 = run_graph500_batched(ev, g.degree, roots, core=core,
+                                        do_validate=False, warmup=True)
+            t_b = float(np.sum(g500.times_s))
+            rows.append(row(
+                f"bfs_single/scale{scale}/batch64", t_b * 1e6 / len(roots),
+                f"hmean_GTEPS={g500.harmonic_mean_teps / 1e9:.5f};"
+                f"batch_us={t_b * 1e6:.0f};n_roots={len(roots)}"))
+            batch_payload = {
+                "n_roots": int(len(roots)),
+                "batch_us": t_b * 1e6,
+                "harmonic_mean_teps": g500.harmonic_mean_teps,
+            }
+        else:
+            rows.append(row(
+                f"bfs_single/scale{scale}/batch64", 0.0,
+                f"SKIPPED:batched-harness-beyond-scale-{batch_scale_max}"
+                "-on-interpret-backend"))
+
+        # --- per-level breakdown + before/after for BENCH_bfs.json -------
+        res_bm = hybrid_bfs(ev, g.degree, root, core=core, engine="bitmap",
+                            chunks=chunks)
+        lv = int(res_bm.stats.levels)
+        speedup = (engines["legacy_engine"]["us_per_call"]
+                   / engines["bitmap_engine"]["us_per_call"])
+        rows.append(row(
+            f"bfs_single/scale{scale}/resident_vs_seed_loop", 0.0,
+            f"speedup={speedup:.2f}x;"
+            f"chunks_per_level={np.asarray(res_bm.stats.scanned_chunks)[:lv].tolist()};"
+            f"total_chunks={int(res_bm.stats.total_chunks)}"))
+        _PAYLOAD[f"scale{scale}"] = {
+            "scale": scale,
+            "engine": "bitmap",
+            "heavy_threshold": threshold,
+            "traversed_edges": m,
+            "engines": engines,
+            "batch64": batch_payload,
+            "per_level": {
+                "direction": np.asarray(res_bm.stats.direction)[:lv].tolist(),
+                "frontier_size":
+                    np.asarray(res_bm.stats.frontier_size)[:lv].tolist(),
+                "scanned_edges":
+                    np.asarray(res_bm.stats.scanned_edges)[:lv].tolist(),
+                "scanned_chunks":
+                    np.asarray(res_bm.stats.scanned_chunks)[:lv].tolist(),
+                "total_chunks": int(res_bm.stats.total_chunks),
+            },
+            "speedup_bitmap_vs_seed_loop": speedup,
+            "speedup_bitmap_nocore_vs_reference_engine": (
+                engines["xla"]["us_per_call"]
+                / engines["bitmap_nocore"]["us_per_call"]),
+        }
     return rows

@@ -7,9 +7,16 @@ Usage::
     BENCH_FAST=0 PYTHONPATH=src python -m benchmarks.run   # full scales
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+
+Modules may additionally expose ``json_payload() -> dict``; the collected
+payloads are written to ``BENCH_bfs.json`` at the repo root (plus run
+metadata) so the perf trajectory is tracked in-tree from PR to PR.
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import sys
 import time
 import traceback
@@ -27,10 +34,38 @@ MODULES = [
 ]
 
 
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                          "BENCH_bfs.json")
+
+
+def _write_json(payloads: dict) -> None:
+    if not payloads:
+        return
+    doc = {
+        "generated_unix": int(time.time()),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "bench_fast": os.environ.get("BENCH_FAST", "1") != "0",
+        "bench_scales": os.environ.get("BENCH_SCALES", ""),
+        "modules": payloads,
+    }
+    try:
+        import jax
+        doc["jax"] = jax.__version__
+        doc["backend"] = jax.default_backend()
+    except Exception:
+        pass
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {BENCH_JSON}", flush=True)
+
+
 def main() -> None:
     want = sys.argv[1:] or MODULES
     print("name,us_per_call,derived")
     failures = []
+    payloads = {}
     for name in want:
         t0 = time.time()
         try:
@@ -38,11 +73,16 @@ def main() -> None:
             rows = mod.run()
             for r in rows:
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+            if hasattr(mod, "json_payload"):
+                payload = mod.json_payload()
+                if payload:
+                    payloads[name] = payload
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures.append(name)
             print(f"# {name} FAILED:", flush=True)
             traceback.print_exc()
+    _write_json(payloads)
     if failures:
         sys.exit(f"benchmark modules failed: {failures}")
 

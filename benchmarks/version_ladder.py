@@ -19,7 +19,8 @@ from repro.core.hybrid_bfs import hybrid_bfs
 def run():
     rows = []
     scale = 10 if FAST else 12
-    rungs = ("reference-3.0.0", "th2", "k", "pre-g500")
+    rungs = ("reference-3.0.0", "th2", "k",
+             "pre-g500-legacy", "pre-g500", "pre-g500-batch")
     teps = {}
     for rung in rungs:
         cfg = Graph500Config.ladder(rung, scale=scale, n_roots=2)
@@ -39,4 +40,9 @@ def run():
         "ladder/speedup_pre-g500_vs_k", 0.0,
         f"speedup={speedup:.2f}x;paper_reports=3.15x_at_512cn;"
         "note=single-CPU-container — see EXPERIMENTS.md ladder discussion"))
+    rows.append(row(
+        "ladder/speedup_resident_vs_seed_loop", 0.0,
+        f"speedup={teps['pre-g500'] / max(teps['pre-g500-legacy'], 1e-9):.2f}x;"
+        "note=bitmap-resident loop + chunked top-down vs the pre-resident "
+        "customized loop"))
     return rows

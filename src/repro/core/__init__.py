@@ -5,20 +5,25 @@ Public API re-exports.
 from repro.core.kronecker import EdgeList, generate_edges, sample_roots
 from repro.core.graph_build import CSRGraph, build_csr
 from repro.core.reorder import Reordering, degree_reorder, reorder_graph
-from repro.core.heavy import HeavyCore, build_heavy_core, pack_bitmap, unpack_bitmap
-from repro.core.bfs_steps import EdgeView, edge_view
-from repro.core.hybrid_bfs import BFSResult, hybrid_bfs
+from repro.core.heavy import (
+    HeavyCore, build_heavy_core, pack_bitmap, padded_bitmap_words, unpack_bitmap,
+)
+from repro.core.bfs_steps import (
+    ChunkedEdgeView, EdgeView, chunk_edge_view, edge_view,
+)
+from repro.core.hybrid_bfs import BFSResult, bfs_batch, hybrid_bfs
 from repro.core.validate import validate
-from repro.core.teps import run_graph500, traversed_edges
+from repro.core.teps import run_graph500, run_graph500_batched, traversed_edges
 from repro.core.pipeline import Graph500Config, build, run
 
 __all__ = [
     "EdgeList", "generate_edges", "sample_roots",
     "CSRGraph", "build_csr",
     "Reordering", "degree_reorder", "reorder_graph",
-    "HeavyCore", "build_heavy_core", "pack_bitmap", "unpack_bitmap",
-    "EdgeView", "edge_view",
-    "BFSResult", "hybrid_bfs",
-    "validate", "run_graph500", "traversed_edges",
+    "HeavyCore", "build_heavy_core", "pack_bitmap", "padded_bitmap_words",
+    "unpack_bitmap",
+    "ChunkedEdgeView", "EdgeView", "chunk_edge_view", "edge_view",
+    "BFSResult", "bfs_batch", "hybrid_bfs",
+    "validate", "run_graph500", "run_graph500_batched", "traversed_edges",
     "Graph500Config", "build", "run",
 ]

@@ -93,3 +93,62 @@ def frontier_edge_count(degree: jax.Array, frontier: jax.Array) -> jax.Array:
 
 def unvisited_edge_count(degree: jax.Array, visited: jax.Array) -> jax.Array:
     return jnp.sum(jnp.where(visited, 0, degree))
+
+
+# ---------------------------------------------------------------------------
+# Chunked edge view: frontier-proportional top-down (DESIGN.md §3).
+#
+# The CSR edge arrays are sorted by (src, dst) with sentinel padding at the
+# tail, and the graph is degree-sorted, so a *contiguous* slice of the edge
+# array covers a contiguous band of source vertices.  Splitting ``E_pad``
+# into fixed chunks and precomputing each chunk's source-vertex range lets
+# the level loop skip chunks whose range holds no frontier bit — after the
+# degree sort a small frontier touches few chunks, so the all-edges O(E)
+# scan becomes roughly frontier-proportional.
+# ---------------------------------------------------------------------------
+
+DEFAULT_CHUNKS = 64
+
+
+@pytree_dataclass(meta=("num_vertices", "n_chunks", "chunk_size"))
+class ChunkedEdgeView:
+    """``EdgeView`` re-laid-out as [n_chunks, chunk_size] with src ranges."""
+
+    src: jax.Array      # [n_chunks, chunk_size] int32 (sentinel V on padding)
+    dst: jax.Array      # [n_chunks, chunk_size] int32
+    valid: jax.Array    # [n_chunks, chunk_size] bool
+    src_lo: jax.Array   # [n_chunks] int32 — min valid src (V when chunk empty)
+    src_hi: jax.Array   # [n_chunks] int32 — max valid src (-1 when chunk empty)
+    num_vertices: int
+    n_chunks: int
+    chunk_size: int
+
+
+def chunk_edge_view(ev: EdgeView, n_chunks: int = DEFAULT_CHUNKS) -> ChunkedEdgeView:
+    """Split the (src-sorted) edge arrays into ``n_chunks`` fixed chunks."""
+    v = ev.num_vertices
+    e_pad = ev.src.shape[0]
+    chunk_size = -(-e_pad // n_chunks)  # ceil
+    pad = n_chunks * chunk_size - e_pad
+    src = jnp.pad(ev.src, (0, pad), constant_values=v).reshape(n_chunks, chunk_size)
+    dst = jnp.pad(ev.dst, (0, pad), constant_values=v).reshape(n_chunks, chunk_size)
+    valid = jnp.pad(ev.valid, (0, pad)).reshape(n_chunks, chunk_size)
+    src_lo = jnp.min(jnp.where(valid, src, v), axis=1).astype(jnp.int32)
+    src_hi = jnp.max(jnp.where(valid, src, -1), axis=1).astype(jnp.int32)
+    return ChunkedEdgeView(src, dst, valid, src_lo, src_hi, v, n_chunks, chunk_size)
+
+
+def chunk_frontier_mask(chunks: ChunkedEdgeView, frontier_bm: jax.Array) -> jax.Array:
+    """bool [n_chunks]: chunk source range intersects the frontier bitmap.
+
+    Word-granularity (conservative superset) test: a chunk is live when any
+    bitmap word overlapping ``[src_lo, src_hi]`` is nonzero.  O(W + n_chunks)
+    per level — negligible next to the edge scan it saves.
+    """
+    w = frontier_bm.shape[0]
+    word_nz = (frontier_bm != 0).astype(jnp.int32)
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(word_nz)])
+    lo_w = jnp.clip(chunks.src_lo // 32, 0, w - 1)
+    hi_w = jnp.clip(chunks.src_hi // 32, 0, w - 1)
+    nonempty = chunks.src_hi >= chunks.src_lo
+    return nonempty & ((cum[hi_w + 1] - cum[lo_w]) > 0)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph_build import CSRGraph, csr_to_edge_arrays
+from repro.kernels.bitmap_ops import WORDS_PER_TILE as BITMAP_TILE_WORDS
 from repro.util import pytree_dataclass
 
 # Pallas tile geometry: rows per tile x words per tile. K is padded so the
@@ -123,6 +124,18 @@ def build_heavy_core(g: CSRGraph, threshold: int = 100, k_static: int | None = N
 
 def bitmap_words(n_bits: int) -> int:
     return (n_bits + 31) // 32
+
+
+def padded_bitmap_words(n_bits: int) -> int:
+    """Words for an ``n_bits`` bitmap aligned to the frontier_update tile.
+
+    The bitmap-resident BFS engine (DESIGN.md §3) sizes its frontier and
+    visited state with this so the fused epilogue kernel needs no padding
+    logic of its own; bits in ``[n_bits, 32 * W)`` stay zero for the whole
+    traversal.
+    """
+    words = bitmap_words(n_bits)
+    return -(-words // BITMAP_TILE_WORDS) * BITMAP_TILE_WORDS
 
 
 def pack_bitmap(mask: jax.Array, n_words: int | None = None) -> jax.Array:

@@ -8,18 +8,30 @@ Switching policy — paper eq. (1)/(2), Fig. 1::
 ``|V|`` counts *active* (non-isolated) vertices — the isolated ~50%
 (paper Fig. 7) are pruned by the degree sort and never traversed.
 
-Engines:
-  * ``reference`` — pure-jnp edge-parallel relaxation both directions.
-  * ``bitmap``    — the customized path: bottom-up levels run the dense
-    heavy-core Pallas kernel (``kernels/frontier_spmv``) plus masked tail
-    relaxation; the frontier epilogue (mask/merge/popcount) runs the fused
-    ``kernels/bitmap_ops`` kernel on packed uint32 bitmaps. This is the
-    Pre-G500 engine of the paper (T1 + T2); ``reference`` is the
-    reference-3.0.0 rung of Fig. 18's ladder.
+Engines (the Fig. 18 ladder, DESIGN.md §3):
+
+  * ``reference`` — pure-jnp edge-parallel relaxation both directions
+    over boolean frontier/visited arrays (the reference-3.0.0 rung).
+  * ``legacy``    — the first customized port: bottom-up levels run the
+    dense heavy-core Pallas kernel, but the frontier lives as ``bool [V]``
+    and is re-packed into a bitmap every bottom-up level, and top-down
+    scans all padded edges regardless of frontier size.  Kept as the
+    measured "before" rung for BENCH_bfs.json.
+  * ``bitmap``    — the bitmap-resident Pre-G500 engine (T1 + T2):
+    ``frontier`` and ``visited`` live as packed ``uint32 [W]`` across the
+    whole ``lax.while_loop`` (bits set once at init, never unpacked inside
+    the loop), the level epilogue (mask / merge / popcount) runs the fused
+    ``kernels.ops.frontier_update`` Pallas kernel, the bottom-up core step
+    consumes the resident bitmap directly, and top-down is *chunked*: the
+    degree-sorted edge array is split into fixed chunks whose source-vertex
+    ranges are tested against the frontier bitmap so small frontiers skip
+    most of the edge scan (frontier-proportional work, DESIGN.md §3).
 
 Everything is a single ``lax.while_loop`` under jit; per-level statistics
-(direction, frontier size, scanned edges) land in fixed-size arrays for
-the Fig. 17 breakdown benchmark.
+(direction, frontier size, scanned edges, scanned chunks) land in
+fixed-size arrays for the Fig. 17 breakdown benchmark.  ``bfs_batch``
+vmaps the bitmap engine over the 64 Graph500 search keys so the whole
+benchmark is one jitted program (see ``core/teps.py``).
 """
 from __future__ import annotations
 
@@ -30,17 +42,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bfs_steps import (
+    DEFAULT_CHUNKS,
+    ChunkedEdgeView,
     EdgeView,
+    chunk_edge_view,
+    chunk_frontier_mask,
     frontier_edge_count,
     masked_relax_step,
     relax_step,
 )
-from repro.core.heavy import HeavyCore, pack_bitmap
+from repro.core.heavy import (
+    HeavyCore,
+    pack_bitmap,
+    padded_bitmap_words,
+    testbit,
+)
 from repro.kernels import ops as kops
-from repro.kernels.ref import BIG
+from repro.kernels.ref import BIG, core_spmv_ref
 
 MAX_LEVELS = 64
 TOP_DOWN, BOTTOM_UP = jnp.int32(0), jnp.int32(1)
+
+ENGINES = ("reference", "legacy", "bitmap")
 
 
 class BFSStats(NamedTuple):
@@ -48,6 +71,8 @@ class BFSStats(NamedTuple):
     frontier_size: jax.Array    # [MAX_LEVELS] int32
     scanned_edges: jax.Array    # [MAX_LEVELS] int32 — work estimate per level
     levels: jax.Array           # [] int32
+    scanned_chunks: jax.Array   # [MAX_LEVELS] int32 — edge chunks relaxed (-1 n/a)
+    total_chunks: jax.Array     # [] int32 — chunk count (0 for unchunked engines)
 
 
 class BFSResult(NamedTuple):
@@ -55,6 +80,11 @@ class BFSResult(NamedTuple):
     level: jax.Array   # [V] int32, -1 = unvisited
     stats: BFSStats
 
+
+# ---------------------------------------------------------------------------
+# Legacy engines: boolean frontier state (reference + the pre-resident
+# customized loop, kept as the measured baseline).
+# ---------------------------------------------------------------------------
 
 class _State(NamedTuple):
     parent_ext: jax.Array
@@ -68,8 +98,8 @@ class _State(NamedTuple):
     stats_se: jax.Array
 
 
-def _core_bottom_up(core: HeavyCore, frontier, visited, parent_ext, v):
-    """Dense-core kernel step + tail relaxation mask combine."""
+def _core_bottom_up_legacy(core: HeavyCore, frontier, visited, parent_ext, v):
+    """Dense-core kernel step with the per-level bool->bitmap round trip."""
     k = core.k
     if k > v:  # tiny graph: core padding exceeds |V|
         frontier_k = jnp.pad(frontier, (0, k - v))
@@ -88,7 +118,7 @@ def _core_bottom_up(core: HeavyCore, frontier, visited, parent_ext, v):
     jax.jit,
     static_argnames=("engine", "alpha", "beta", "use_core", "max_levels"),
 )
-def _run(
+def _run_legacy(
     ev: EdgeView,
     degree: jax.Array,
     n_active: jax.Array,
@@ -135,7 +165,7 @@ def _run(
             new_parent, nxt = relax_step(ev, s.parent_ext, s.frontier, s.visited)
         else:
             def bu(_):
-                p1 = _core_bottom_up(core, s.frontier, s.visited, s.parent_ext, v)
+                p1 = _core_bottom_up_legacy(core, s.frontier, s.visited, s.parent_ext, v)
                 p2, _ = masked_relax_step(ev, p1, s.frontier, s.visited, tail_mask)
                 return p2
 
@@ -175,8 +205,280 @@ def _run(
     return BFSResult(
         parent=parent,
         level=s.level,
-        stats=BFSStats(s.stats_dir, s.stats_fs, s.stats_se, s.lvl),
+        stats=BFSStats(
+            s.stats_dir, s.stats_fs, s.stats_se, s.lvl,
+            jnp.full((max_levels,), -1, jnp.int32), jnp.int32(0),
+        ),
     )
+
+
+# ---------------------------------------------------------------------------
+# Bitmap-resident engine (DESIGN.md §3).
+#
+# Loop invariants:
+#   I1. frontier_bm / visited_bm are packed uint32 [W] for the *whole*
+#       traversal — bits are set once at init and the resident state is
+#       never unpacked inside the while body (membership tests are
+#       single-bit word gathers).
+#   I2. in_count == popcount(frontier_bm); it comes from the fused
+#       frontier_update epilogue of the previous level, never recounted.
+#   I3. next-frontier bits are derived from the parent-array *delta*: the
+#       newly-found vector is already materialized for level bookkeeping,
+#       and the epilogue packs it word-wise (O(V/32) output work) before
+#       the fused frontier_update — no per-edge bit bookkeeping, and no
+#       round trip of the resident frontier/visited state.
+#   I4. parent_ext is the scatter-min array of the boolean-semiring SpMV;
+#       the bitmap engine's parent/level outputs are byte-identical to the
+#       reference engine's.
+# ---------------------------------------------------------------------------
+
+class _ResidentState(NamedTuple):
+    parent_ext: jax.Array    # [V+1] int32
+    level: jax.Array         # [V] int32
+    frontier_bm: jax.Array   # [W] uint32 — resident, packed
+    visited_bm: jax.Array    # [W] uint32 — resident, packed
+    in_count: jax.Array      # [] int32 — popcount(frontier_bm)  (I2)
+    vis_count: jax.Array     # [] int32 — popcount(visited_bm)
+    m_f: jax.Array           # [] int32 — sum of degree over the frontier
+    deg_vis: jax.Array       # [] int32 — sum of degree over visited
+    lvl: jax.Array
+    direction: jax.Array
+    stats_dir: jax.Array
+    stats_fs: jax.Array
+    stats_se: jax.Array
+    stats_ch: jax.Array
+
+
+def _core_bottom_up_resident(core: HeavyCore, frontier_bm, visited_bm,
+                             parent_ext, v, use_pallas_core):
+    """Dense-core kernel step consuming the resident frontier bitmap.
+
+    No per-level pack: the kernel reads ``frontier_bm[:K/32]`` directly;
+    winners scatter-min their parent row-wise.  ``use_pallas_core=False``
+    swaps in the parity-tested jnp oracle — used by the batched harness on
+    interpret-mode backends, where a vmapped interpreted kernel grid is
+    pure overhead (DESIGN.md §8).
+    """
+    k = core.k
+    spmv = kops.core_spmv if use_pallas_core else core_spmv_ref
+    cand = spmv(core.a_core, frontier_bm[: k // 32])  # int32 [K]
+    rows = jnp.arange(k, dtype=jnp.int32)
+    won = (cand < BIG) & ~testbit(visited_bm, rows)
+    tgt = jnp.where(won, rows, v)
+    return parent_ext.at[tgt].min(jnp.where(won, cand, v).astype(jnp.int32))
+
+
+def _relax_edges(sc, dc, vc, frontier_bm, visited_bm, parent, v):
+    """One edge-parallel relax pass in bitmap space (shared by the chunked
+    top-down and the flat bottom-up tail).
+
+    Frontier/visited membership tests are single-bit gathers from the
+    resident bitmaps; newly found vertices surface later as the parent
+    delta (I3), so the pass itself is a pure scatter-min.
+    """
+    active = vc & testbit(frontier_bm, sc) & ~testbit(visited_bm, dc)
+    cand = jnp.where(active, sc, v).astype(jnp.int32)
+    tgt = jnp.where(active, dc, v)
+    return parent.at[tgt].min(cand)
+
+
+def _chunked_relax(chunks: ChunkedEdgeView, live, frontier_bm,
+                   visited_bm, parent_ext, v):
+    """Top-down relaxation over live edge chunks only.
+
+    ``live[c]`` gates each chunk behind ``lax.cond`` so skipped chunks
+    cost nothing — small frontiers touch few chunks (DESIGN.md §3).
+    Returns the updated parent scatter-min array and the number of chunks
+    relaxed.
+    """
+
+    def body(c, carry):
+        def relax(carry):
+            parent, nsc = carry
+            sc = jax.lax.dynamic_index_in_dim(chunks.src, c, 0, keepdims=False)
+            dc = jax.lax.dynamic_index_in_dim(chunks.dst, c, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(chunks.valid, c, 0, keepdims=False)
+            parent = _relax_edges(
+                sc, dc, vc, frontier_bm, visited_bm, parent, v)
+            return parent, nsc + 1
+
+        return jax.lax.cond(live[c], relax, lambda x: x, carry)
+
+    return jax.lax.fori_loop(
+        0, chunks.n_chunks, body, (parent_ext, jnp.int32(0))
+    )
+
+
+def _pack_delta_words(newly: jax.Array, w: int) -> jax.Array:
+    """Pack the per-level newly-found vector into uint32 words (I3).
+
+    This packs the level *delta* (already materialized for level
+    bookkeeping), not the resident frontier/visited state — O(V) input,
+    O(V/32) output, no gather/scatter.  It feeds the fused
+    ``frontier_update`` epilogue as ``next_raw``.
+
+    Deliberately NOT a call to ``heavy.pack_bitmap`` — the acceptance
+    contract instruments that symbol to prove the resident state never
+    round-trips inside the loop.  The LSB-first convention here must
+    match it bit-for-bit; ``tests/test_bitmap.py`` locks the two
+    implementations together.
+    """
+    n = newly.shape[0]
+    pad = w * 32 - n
+    m = jnp.concatenate([newly, jnp.zeros((pad,), bool)]) if pad else newly
+    bits = m.reshape(w, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=1, dtype=jnp.uint32)
+
+
+def _run_bitmap_impl(
+    chunks: ChunkedEdgeView,
+    degree: jax.Array,
+    n_active: jax.Array,
+    root: jax.Array,
+    core: HeavyCore | None,
+    *,
+    alpha: float,
+    beta: float,
+    use_core: bool,
+    max_levels: int,
+    use_pallas_core: bool = True,
+) -> BFSResult:
+    v = chunks.num_vertices
+    w = padded_bitmap_words(v)
+    nnz_total = jnp.sum(degree).astype(jnp.int32)
+
+    parent_ext = jnp.full((v + 1,), v, jnp.int32).at[root].set(root)
+    level = jnp.full((v,), -1, jnp.int32).at[root].set(0)
+    # pack once at init: the root is the only set bit.
+    root_bit = jnp.uint32(1) << (root % 32).astype(jnp.uint32)
+    frontier_bm = jnp.zeros((w,), jnp.uint32).at[root // 32].set(root_bit)
+    visited_bm = frontier_bm
+    deg_root = degree[root].astype(jnp.int32)
+
+    # Flat edge views for the bottom-up pass: BU frontiers are large (the
+    # whole point of the direction switch), so chunk skipping cannot win
+    # there — one vectorized relax over the (tail) edges is strictly
+    # better than 64 dependent chunk iterations.
+    src_flat = chunks.src.reshape(-1)
+    dst_flat = chunks.dst.reshape(-1)
+    if use_core:
+        tail_flat = (chunks.valid
+                     & ~((chunks.src < core.k) & (chunks.dst < core.k))
+                     ).reshape(-1)
+    else:
+        tail_flat = chunks.valid.reshape(-1)
+
+    def cond(s: _ResidentState):
+        return (s.in_count > 0) & (s.lvl < max_levels)
+
+    def body(s: _ResidentState):
+        # Under vmap (bfs_batch) the while loop runs until *all* roots are
+        # done; `alive` masks the state update for roots already finished.
+        alive = s.in_count > 0
+
+        thrv1 = ((n_active - s.vis_count).astype(jnp.float32) / alpha).astype(jnp.int32)
+        thrv2 = (n_active.astype(jnp.float32) / beta).astype(jnp.int32)
+        direction = jnp.where(
+            (s.direction == TOP_DOWN) & (s.in_count > thrv1),
+            BOTTOM_UP,
+            jnp.where(
+                (s.direction == BOTTOM_UP) & (s.in_count < thrv2),
+                TOP_DOWN,
+                s.direction,
+            ),
+        )
+
+        def bu(_):
+            # Dense-core kernel step (consuming the resident bitmap), then
+            # ONE vectorized relax over the tail edges — BU frontiers are
+            # large, so there is nothing for chunk skipping to skip.
+            if use_core:
+                p1 = _core_bottom_up_resident(
+                    core, s.frontier_bm, s.visited_bm, s.parent_ext,
+                    v, use_pallas_core)
+            else:
+                p1 = s.parent_ext
+            p2 = _relax_edges(
+                src_flat, dst_flat, tail_flat, s.frontier_bm, s.visited_bm,
+                p1, v)
+            return p2, jnp.int32(chunks.n_chunks)  # full scan
+
+        def td(_):
+            live = chunk_frontier_mask(chunks, s.frontier_bm)
+            return _chunked_relax(
+                chunks, live, s.frontier_bm, s.visited_bm, s.parent_ext, v)
+
+        new_parent, nsc = jax.lax.cond(direction == BOTTOM_UP, bu, td, None)
+
+        # Epilogue: the newly-found delta (needed for level bookkeeping
+        # anyway) packs word-wise into next_raw (I3), then the fused
+        # kernel does mask / merge / popcount in one pass (T1).
+        newly = (new_parent[:v] != v) & (s.parent_ext[:v] == v)
+        found = _pack_delta_words(newly, w)
+        next_bm, new_visited_bm, count = kops.frontier_update(found, s.visited_bm)
+
+        new_level = jnp.where(newly, s.lvl + 1, s.level)
+        m_next = jnp.sum(jnp.where(newly, degree, 0)).astype(jnp.int32)
+
+        # scanned-edge estimate, maintained incrementally (paper Fig. 17):
+        # TD scans frontier adjacency (m_f), BU scans unvisited adjacency.
+        m_u = nnz_total - s.deg_vis
+        scanned = jnp.where(direction == TOP_DOWN, s.m_f, m_u).astype(jnp.int32)
+
+        nxt = _ResidentState(
+            new_parent, new_level, next_bm, new_visited_bm,
+            count.astype(jnp.int32), s.vis_count + count.astype(jnp.int32),
+            m_next, s.deg_vis + m_next,
+            s.lvl + 1, direction,
+            s.stats_dir.at[s.lvl].set(direction),
+            s.stats_fs.at[s.lvl].set(s.in_count),
+            s.stats_se.at[s.lvl].set(scanned),
+            s.stats_ch.at[s.lvl].set(nsc),
+        )
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(alive, new, old), nxt, s)
+
+    init = _ResidentState(
+        parent_ext, level, frontier_bm, visited_bm,
+        jnp.int32(1), jnp.int32(1), deg_root, deg_root,
+        jnp.int32(0), TOP_DOWN,
+        jnp.full((max_levels,), -1, jnp.int32),
+        jnp.zeros((max_levels,), jnp.int32),
+        jnp.zeros((max_levels,), jnp.int32),
+        jnp.full((max_levels,), -1, jnp.int32),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    # unpack once at exit: outputs are the parent/level arrays (the resident
+    # bitmaps never leave packed form).
+    parent = jnp.where(s.parent_ext[:v] == v, -1, s.parent_ext[:v])
+    return BFSResult(
+        parent=parent,
+        level=s.level,
+        stats=BFSStats(
+            s.stats_dir, s.stats_fs, s.stats_se, s.lvl,
+            s.stats_ch, jnp.int32(chunks.n_chunks),
+        ),
+    )
+
+
+_BITMAP_STATICS = ("alpha", "beta", "use_core", "max_levels", "use_pallas_core")
+
+_run_bitmap = functools.partial(
+    jax.jit, static_argnames=_BITMAP_STATICS,
+)(_run_bitmap_impl)
+
+
+@functools.partial(jax.jit, static_argnames=_BITMAP_STATICS)
+def _run_batch(chunks, degree, n_active, roots, core, *,
+               alpha, beta, use_core, max_levels, use_pallas_core):
+    """All search keys under ONE jitted program (vmap over roots)."""
+    return jax.vmap(
+        lambda r: _run_bitmap_impl(
+            chunks, degree, n_active, r, core,
+            alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
+            use_pallas_core=use_pallas_core)
+    )(roots)
 
 
 def hybrid_bfs(
@@ -189,15 +491,69 @@ def hybrid_bfs(
     alpha: float = 14.0,
     beta: float = 24.0,
     max_levels: int = MAX_LEVELS,
+    chunks: ChunkedEdgeView | None = None,
+    n_chunks: int = DEFAULT_CHUNKS,
 ) -> BFSResult:
-    """Run one hybrid BFS from ``root``. ``engine in {reference, bitmap}``."""
-    if engine not in ("reference", "bitmap"):
-        raise ValueError(f"unknown engine {engine!r}")
+    """Run one hybrid BFS from ``root``.
+
+    ``engine in {reference, legacy, bitmap}`` — see the module docstring.
+    ``chunks`` lets callers reuse a precomputed :func:`chunk_edge_view`
+    (the bitmap engine builds one per call otherwise).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
     n_active = jnp.sum(degree > 0).astype(jnp.int32)
-    use_core = engine == "bitmap" and core is not None
     root = jnp.asarray(root, jnp.int32)
-    return _run(
+    if engine == "bitmap":
+        if chunks is None:
+            chunks = chunk_edge_view(ev, n_chunks)
+        use_core = core is not None
+        return _run_bitmap(
+            chunks, degree, n_active, root, core if use_core else None,
+            alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
+        )
+    use_core = engine == "legacy" and core is not None
+    return _run_legacy(
         ev, degree, n_active, root, core if use_core else None,
         engine=engine, alpha=alpha, beta=beta,
         use_core=use_core, max_levels=max_levels,
+    )
+
+
+def bfs_batch(
+    ev: EdgeView,
+    degree: jax.Array,
+    roots,
+    *,
+    core: HeavyCore | None = None,
+    alpha: float = 14.0,
+    beta: float = 24.0,
+    max_levels: int = MAX_LEVELS,
+    chunks: ChunkedEdgeView | None = None,
+    n_chunks: int = DEFAULT_CHUNKS,
+) -> BFSResult:
+    """Batched bitmap-engine BFS: one jitted program for all ``roots``.
+
+    Returns a :class:`BFSResult` whose leaves carry a leading roots axis.
+    This is the Graph500 64-search-key harness: the whole benchmark loop
+    compiles once and the hardware sees a single fused program.  (Under
+    vmap ``lax.cond`` lowers to ``select`` so per-root chunk skipping
+    becomes masking — expected: different roots have different live
+    chunks.  Per-root wall-clock comes from the batch timer in
+    ``core/teps.py``.)
+
+    On interpret-mode backends (XLA:CPU container) the dense-core step
+    uses the parity-tested jnp oracle instead of the vmapped interpreted
+    Pallas kernel, whose batched grid is pure overhead (DESIGN.md §8); on
+    a real TPU backend the kernel path is used.
+    """
+    if chunks is None:
+        chunks = chunk_edge_view(ev, n_chunks)
+    n_active = jnp.sum(degree > 0).astype(jnp.int32)
+    roots = jnp.asarray(roots, jnp.int32)
+    use_core = core is not None
+    return _run_batch(
+        chunks, degree, n_active, roots, core if use_core else None,
+        alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
+        use_pallas_core=not kops.interpret_mode(),
     )

@@ -5,8 +5,17 @@ The four rungs of Fig. 18, as config knobs:
   reference-3.0.0  : no sort, no core, reference engine
   TH-2             : degree sort (T2a), reference engine
   K                : degree sort + hybrid switch tuning
-  Pre-G500         : degree sort + heavy core (T2b) + bitmap/Pallas engine
-                     (T1) [+ monitor comm (T3) in the distributed runner]
+  Pre-G500         : degree sort + heavy core (T2b) + bitmap-resident
+                     Pallas engine (T1) [+ monitor comm (T3) in the
+                     distributed runner]
+
+Extra rungs beyond the paper's figure:
+
+  pre-g500-legacy  : the pre-resident customized loop (per-level bitmap
+                     round trip, all-edges top-down) — the measured
+                     "before" for BENCH_bfs.json;
+  pre-g500-batch   : the resident engine with all search keys vmapped
+                     into ONE jitted program (``batched=True``).
 """
 from __future__ import annotations
 
@@ -21,7 +30,7 @@ from repro.core.bfs_steps import EdgeView, edge_view
 from repro.core.graph_build import build_csr
 from repro.core.heavy import HeavyCore, build_heavy_core
 from repro.core.reorder import Reordering, degree_reorder, relabel_edges
-from repro.core.teps import Graph500Run, run_graph500
+from repro.core.teps import Graph500Run, run_graph500, run_graph500_batched
 
 
 @dataclass(frozen=True)
@@ -32,9 +41,10 @@ class Graph500Config:
     n_roots: int = 8
     degree_sort: bool = True
     heavy_threshold: Optional[int] = 100   # None disables the dense core
-    engine: str = "bitmap"                 # "reference" | "bitmap"
+    engine: str = "bitmap"                 # "reference" | "legacy" | "bitmap"
     alpha: float = 14.0
     beta: float = 24.0
+    batched: bool = False                  # one jitted program for all roots
 
     @staticmethod
     def ladder(rung: str, **kw) -> "Graph500Config":
@@ -45,8 +55,12 @@ class Graph500Config:
                         engine="reference"),
             "k": dict(degree_sort=True, heavy_threshold=None,
                       engine="reference", alpha=8.0, beta=64.0),
+            "pre-g500-legacy": dict(degree_sort=True, heavy_threshold=100,
+                                    engine="legacy"),
             "pre-g500": dict(degree_sort=True, heavy_threshold=100,
                              engine="bitmap"),
+            "pre-g500-batch": dict(degree_sort=True, heavy_threshold=100,
+                                   engine="bitmap", batched=True),
         }
         return Graph500Config(**{**presets[rung], **kw})
 
@@ -90,9 +104,17 @@ def run(cfg: Graph500Config, built: BuiltGraph | None = None) -> tuple[BuiltGrap
     roots = kronecker.sample_roots(cfg.seed, edges, cfg.n_roots)
     if built.reorder is not None:
         roots = built.reorder.new_from_old[roots]
-    result = run_graph500(
-        built.ev, built.degree, roots,
-        core=built.core, engine=cfg.engine,
-        alpha=cfg.alpha, beta=cfg.beta,
-    )
+    if cfg.batched:
+        if cfg.engine != "bitmap":
+            raise ValueError("batched harness requires engine='bitmap'")
+        result = run_graph500_batched(
+            built.ev, built.degree, roots,
+            core=built.core, alpha=cfg.alpha, beta=cfg.beta,
+        )
+    else:
+        result = run_graph500(
+            built.ev, built.degree, roots,
+            core=built.core, engine=cfg.engine,
+            alpha=cfg.alpha, beta=cfg.beta,
+        )
     return built, result

@@ -13,8 +13,14 @@ three times from HBM; at the 2**30-vertex scales the paper targets the
 bitmaps are 128 MiB each, so fusion cuts HBM traffic 3x on the level
 epilogue.
 
-Layout: bitmaps are uint32 [W] with W % 1024 == 0 (see heavy.pad_k); the
-kernel views them as [W // 128, 128] and tiles (ROWS_PER_TILE, 128).
+Layout: bitmaps are uint32 [W] with W % 1024 == 0 (see
+``heavy.padded_bitmap_words``); the kernel views them as [W // 128, 128]
+and tiles (ROWS_PER_TILE, 128).
+
+This kernel IS the per-level epilogue of the bitmap-resident BFS engine
+(DESIGN.md §3 I2): the engine's ``lax.while_loop`` carries packed
+frontier/visited words and calls this once per level — the returned
+popcount is the ``|in|`` of the direction switch, never recounted.
 """
 from __future__ import annotations
 

@@ -23,7 +23,11 @@ def interpret_mode() -> bool:
 
 
 def frontier_update(next_raw: jax.Array, visited: jax.Array):
-    """Fused: next &= ~visited; visited |= next; count = popcount(next)."""
+    """Fused: next &= ~visited; visited |= next; count = popcount(next).
+
+    The hot per-level epilogue of the bitmap-resident BFS loop
+    (``core/hybrid_bfs.py``, DESIGN.md §3 I2).
+    """
     return bitmap_ops.frontier_update(next_raw, visited, interpret=interpret_mode())
 
 

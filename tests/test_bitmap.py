@@ -1,0 +1,89 @@
+"""Bitmap primitives: pack/unpack/testbit round trips and the fused
+frontier_update kernel vs its jnp oracle, including the non-multiple-of-32
+padding edge case the resident BFS engine relies on (DESIGN.md §3 I1)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.heavy import (
+    bitmap_words, pack_bitmap, padded_bitmap_words, unpack_bitmap,
+)
+from repro.core.heavy import testbit as bit_at  # alias: pytest must not collect
+from repro.kernels import ref
+from repro.kernels.bitmap_ops import WORDS_PER_TILE, frontier_update
+
+
+@pytest.mark.parametrize("n_bits", [1, 31, 32, 33, 1000, 4096, 32768 - 5])
+@pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+def test_pack_unpack_testbit_roundtrip(n_bits, density):
+    rng = np.random.default_rng(n_bits)
+    mask = rng.random(n_bits) < density
+    bm = pack_bitmap(jnp.asarray(mask))
+    assert bm.shape == (bitmap_words(n_bits),)
+    back = np.asarray(unpack_bitmap(bm, n_bits))
+    np.testing.assert_array_equal(back, mask)
+    idx = rng.integers(0, n_bits, size=min(64, n_bits))
+    got = np.asarray(bit_at(bm, jnp.asarray(idx, jnp.int32)))
+    np.testing.assert_array_equal(got, mask[idx])
+
+
+@pytest.mark.parametrize("n_bits", [1, 1000, 32768 - 17])
+def test_pack_padding_bits_stay_zero(n_bits):
+    # Bits beyond n_bits must be zero — the resident engine's bitmaps are
+    # tile-padded and trailing garbage would corrupt popcounts (I1).
+    mask = np.ones(n_bits, bool)
+    w = padded_bitmap_words(n_bits)
+    bm = np.asarray(pack_bitmap(jnp.asarray(mask), w))
+    assert bm.shape == (w,) and w % WORDS_PER_TILE == 0
+    total = int(ref.popcount_u32(jnp.asarray(bm)).sum())
+    assert total == n_bits
+
+
+@pytest.mark.parametrize("n_bits", [999, 32768 - 1])
+def test_frontier_update_on_nonmultiple_packed_masks(n_bits):
+    """Parity with frontier_update_ref when inputs come from bool masks whose
+    length is not a multiple of 32 (tile-padded like the BFS engine does)."""
+    rng = np.random.default_rng(n_bits)
+    nxt_mask = rng.random(n_bits) < 0.3
+    vis_mask = rng.random(n_bits) < 0.4
+    w = padded_bitmap_words(n_bits)
+    nxt = pack_bitmap(jnp.asarray(nxt_mask), w)
+    vis = pack_bitmap(jnp.asarray(vis_mask), w)
+    out_n, out_v, count = frontier_update(nxt, vis, interpret=True)
+    ref_n, ref_v, ref_c = ref.frontier_update_ref(nxt, vis)
+    np.testing.assert_array_equal(np.asarray(out_n), np.asarray(ref_n))
+    np.testing.assert_array_equal(np.asarray(out_v), np.asarray(ref_v))
+    assert int(count) == int(ref_c)
+    # and against the boolean model
+    expect_next = nxt_mask & ~vis_mask
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bitmap(out_n, n_bits)), expect_next)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bitmap(out_v, n_bits)), vis_mask | expect_next)
+    assert int(count) == int(expect_next.sum())
+
+
+@pytest.mark.parametrize("n_bits", [1, 1000, 32768])
+def test_delta_pack_matches_pack_bitmap(n_bits):
+    """hybrid_bfs._pack_delta_words must share pack_bitmap's bit order.
+
+    The engine keeps a private copy (so the no-pack-in-loop contract can
+    instrument heavy.pack_bitmap); this locks the two together so a
+    convention change in either breaks loudly instead of silently
+    desyncing the delta pack from testbit/frontier_update/core_spmv.
+    """
+    from repro.core.hybrid_bfs import _pack_delta_words
+    rng = np.random.default_rng(n_bits)
+    mask = jnp.asarray(rng.random(n_bits) < 0.4)
+    w = padded_bitmap_words(n_bits)
+    np.testing.assert_array_equal(
+        np.asarray(_pack_delta_words(mask, w)),
+        np.asarray(pack_bitmap(mask, w)))
+
+
+def test_padded_bitmap_words_alignment():
+    for n in (1, 32, 32768, 32769, 10**6):
+        w = padded_bitmap_words(n)
+        assert w % WORDS_PER_TILE == 0
+        assert w * 32 >= n
+        assert (w - WORDS_PER_TILE) * 32 < n

@@ -1,11 +1,15 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.heavy import pack_bitmap, unpack_bitmap
+from repro.core.heavy import pack_bitmap, testbit, unpack_bitmap
 from repro.core.reorder import degree_reorder
 from repro.comms.topology import TreeTopology, elect_monitors
 from repro.kernels import ref
@@ -22,6 +26,17 @@ def test_bitmap_roundtrip(bits):
     bm = pack_bitmap(mask, w)
     back = unpack_bitmap(bm, len(bits))
     assert np.array_equal(np.asarray(back), np.array(bits))
+
+
+@SMALL
+@given(st.lists(st.booleans(), min_size=1, max_size=300),
+       st.integers(0, 10_000))
+def test_bitmap_testbit_agrees_with_mask(bits, seed):
+    mask = np.array(bits)
+    bm = pack_bitmap(jnp.asarray(mask), (len(bits) + 31) // 32)
+    idx = np.random.default_rng(seed).integers(0, len(bits), size=32)
+    got = np.asarray(testbit(bm, jnp.asarray(idx, jnp.int32)))
+    assert np.array_equal(got, mask[idx])
 
 
 @SMALL
