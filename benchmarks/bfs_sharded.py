@@ -1,0 +1,231 @@
+"""Mesh-sharded Graph500 ladder (DESIGN.md §9): BENCH_bfs.json rungs per
+mesh shape.
+
+Two harness layers over 8 forced host devices (the container is XLA:CPU;
+relative rungs, not absolute GTEPS, are the tracked numbers):
+
+  * root-parallel  — ``bfs_batch_sharded`` over a ("root",) mesh of
+    1/2/4/8 devices: the 64 search keys split with zero communication.
+    Rung "1" is plain single-device ``bfs_batch`` (the PR-1 baseline).
+    Parents are asserted bitwise-identical to the baseline for every
+    shape before timing.
+  * vertex-sharded — ``run_graph500_sharded`` over (group, member)
+    meshes 2x1 / 2x2 / 4x2: one giant traversal spans the mesh, the
+    per-level delta bitmaps combine through the T3 two-phase bitwise-OR
+    collective (``exchange=hier_or``).
+
+Because the main benchmark process must keep seeing one device, the
+measurements run in a child process carrying
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the child prints
+a JSON payload the parent folds into ``BENCH_bfs.json``.
+
+Env knobs: ``BENCH_SHARDED_SCALE`` (default 14 — the acceptance scale),
+``BENCH_SHARDED_ROOTS`` (default 64), ``BENCH_SHARDED_VERTEX_ROOTS``
+(default 16: the vertex-sharded SPMD batch multiplies every collective
+by the root lane count, so the full 64 is a knob, not the default, on
+the interpret-mode container).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.common import row
+
+_MARK = "BFS_SHARDED_JSON:"
+_PAYLOAD: dict = {}
+
+ROOT_SHAPES = (1, 2, 4, 8)
+VERTEX_SHAPES = ((2, 1), (2, 2), (4, 2))
+
+
+def json_payload() -> dict:
+    return _PAYLOAD
+
+
+def _child() -> dict:
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        build_csr, build_heavy_core, bfs_batch, bfs_batch_sharded,
+        chunk_edge_view, degree_reorder, edge_view, generate_edges,
+        run_graph500_sharded, sample_roots, traversed_edges,
+    )
+    from repro.core.distributed_bfs import shard_graph
+    from repro.core.graph_build import csr_to_edge_arrays
+    from repro.core.reorder import relabel_edges
+    from repro.kernels import ops as kops
+    from repro.util import make_mesh
+
+    scale = int(os.environ.get("BENCH_SHARDED_SCALE", "14"))
+    n_roots = int(os.environ.get("BENCH_SHARDED_ROOTS", "64"))
+    n_vroots = int(os.environ.get("BENCH_SHARDED_VERTEX_ROOTS", "16"))
+    reps = int(os.environ.get("BENCH_SHARDED_REPS", "2"))
+
+    edges = generate_edges(1, scale)
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)
+    g = build_csr(relabel_edges(edges, r))
+    ev = edge_view(g)
+    chunks = chunk_edge_view(ev)
+    threshold = 100 if scale >= 13 else 8
+    core = build_heavy_core(g, threshold=threshold)
+    roots = np.asarray(sample_roots(1, edges, n_roots))
+    roots = np.asarray(r.new_from_old)[roots].astype(np.int32)
+
+    def teps_of(res, per_root_s):
+        m = np.asarray(jax.vmap(traversed_edges, in_axes=(None, 0))(
+            g.degree, res))
+        t = m / per_root_s
+        t = t[t > 0]
+        return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
+
+    out: dict = {
+        "scale": scale,
+        "n_roots": n_roots,
+        "n_devices_visible": len(jax.devices()),
+        "interpret_mode": kops.interpret_mode(),
+        "exchange": "hier_or",
+        "root_parallel": {},
+        "vertex_sharded": {},
+        "mesh_ladder": {},
+    }
+
+    # ---- root-parallel ladder (layer 1) --------------------------------
+    kw = dict(core=core, chunks=chunks)
+    base_res = bfs_batch(ev, g.degree, roots, **kw)       # warmup + oracle
+    base_parent = np.asarray(base_res.parent)
+    base_per_root = None
+    identical = True
+    for n_dev in ROOT_SHAPES:
+        if n_dev == 1:
+            fn = lambda: bfs_batch(ev, g.degree, roots, **kw)
+        else:
+            mesh = make_mesh((n_dev,), ("root",))
+            fn = (lambda mesh=mesh:
+                  bfs_batch_sharded(ev, g.degree, roots, mesh=mesh, **kw))
+        res = fn()                                        # compile + check
+        jax.block_until_ready(res.parent)
+        same = bool(np.array_equal(np.asarray(res.parent), base_parent))
+        if not same:
+            raise AssertionError(
+                f"root-parallel mesh={n_dev}: parents diverge from "
+                f"single-device bfs_batch — parity regression")
+        identical &= same
+        # min over reps: the rung ratio is the tracked number and a single
+        # 40 s wall sample is at the mercy of background load.
+        wall = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = fn()
+            jax.block_until_ready(res.parent)
+            wall = min(wall, time.perf_counter() - t0)
+        per_root = wall / n_roots
+        if n_dev == 1:
+            base_per_root = per_root
+        rung = {
+            "mesh": f"{n_dev}",
+            "layer": "root_parallel",
+            "wall_us": wall * 1e6,
+            "per_root_us": per_root * 1e6,
+            "harmonic_mean_teps": teps_of(res, per_root),
+            "n_roots": n_roots,
+            "rel_per_root_vs_single": per_root / base_per_root,
+        }
+        out["root_parallel"][str(n_dev)] = rung
+        print(f"# root_parallel mesh={n_dev}: wall={wall:.2f}s "
+              f"rel={rung['rel_per_root_vs_single']:.3f}", file=sys.stderr)
+    out["parents_bitwise_identical"] = identical
+
+    # ---- vertex-sharded ladder (layer 2) -------------------------------
+    # The acceptance shapes are pinned; the topology planner's answer for
+    # all visible devices (member sized to the router group) rides along
+    # as its own rung so the eq.-5-derived shape is measured, not assumed.
+    from repro.comms.topology import plan_device_mesh
+    planned = plan_device_mesh(len(jax.devices()))
+    shapes = list(VERTEX_SHAPES)
+    if planned not in shapes:
+        shapes.append(planned)
+    out["planned_shape"] = f"{planned[0]}x{planned[1]}"
+    src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
+    vroots = roots[:n_vroots]
+    for shape in shapes:
+        p = shape[0] * shape[1]
+        sg = shard_graph(src, dst, valid, g.num_vertices, p)
+        mesh = make_mesh(shape, ("group", "member"))
+        run = run_graph500_sharded(mesh, sg, g.degree, vroots, core=core,
+                                   exchange="hier_or", ev=ev)
+        if not run.all_valid:
+            raise AssertionError(
+                f"vertex-sharded mesh={shape}: spec validation failed")
+        name = f"{shape[0]}x{shape[1]}"
+        out["vertex_sharded"][name] = {
+            "mesh": name,
+            "layer": "vertex_sharded",
+            "wall_us": float(np.sum(run.times_s)) * 1e6,
+            "per_root_us": float(np.mean(run.times_s)) * 1e6,
+            "harmonic_mean_teps": run.harmonic_mean_teps,
+            "n_roots": len(vroots),
+            "validated": run.all_valid,
+        }
+        print(f"# vertex_sharded mesh={name}: "
+              f"wall={float(np.sum(run.times_s)):.2f}s", file=sys.stderr)
+
+    # ---- acceptance view: one rung per mesh shape ----------------------
+    out["mesh_ladder"]["1"] = out["root_parallel"]["1"]
+    out["mesh_ladder"]["2"] = out["root_parallel"]["2"]
+    for name, rung in out["vertex_sharded"].items():
+        out["mesh_ladder"][name] = rung
+    return out
+
+
+def run():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bfs_sharded", "--child"],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=7200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded benchmark child failed:\n"
+                           f"{proc.stderr[-4000:]}")
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith(_MARK):
+            payload = json.loads(line[len(_MARK):])
+    if payload is None:
+        raise RuntimeError(f"no payload marker in child stdout:\n"
+                           f"{proc.stdout[-2000:]}")
+    _PAYLOAD.update(payload)
+
+    rows = []
+    for name, rung in payload["mesh_ladder"].items():
+        rows.append(row(
+            f"bfs_sharded/scale{payload['scale']}/mesh{name}",
+            rung["per_root_us"],
+            f"layer={rung['layer']};"
+            f"hmean_GTEPS={rung['harmonic_mean_teps'] / 1e9:.5f};"
+            f"wall_us={rung['wall_us']:.0f};n_roots={rung['n_roots']}"))
+    for n_dev, rung in payload["root_parallel"].items():
+        rows.append(row(
+            f"bfs_sharded/scale{payload['scale']}/root_parallel{n_dev}",
+            rung["per_root_us"],
+            f"rel_vs_single={rung['rel_per_root_vs_single']:.3f};"
+            f"identical={payload['parents_bitwise_identical']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        print(_MARK + json.dumps(_child()))
+    else:
+        from benchmarks.common import print_rows
+        print_rows(run())

@@ -24,6 +24,7 @@ import traceback
 MODULES = [
     "degree_census",      # Fig. 7
     "bfs_single",         # Fig. 10/11
+    "bfs_sharded",        # mesh-sharded ladder (DESIGN.md §9)
     "sorting_policies",   # Fig. 12/13
     "heavy_threshold",    # Fig. 14
     "monitor_policies",   # Fig. 15/16
@@ -41,18 +42,37 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(__file__)),
 def _write_json(payloads: dict) -> None:
     if not payloads:
         return
+    # Merge per-module into the existing file: a partial run (one CI leg,
+    # a single-module local run) must not clobber the other modules'
+    # tracked trajectory.
+    modules = {}
+    try:
+        with open(BENCH_JSON) as f:
+            modules = json.load(f).get("modules", {})
+    except (OSError, ValueError):
+        pass
+    modules.update(payloads)
     doc = {
         "generated_unix": int(time.time()),
         "platform": platform.platform(),
         "python": platform.python_version(),
         "bench_fast": os.environ.get("BENCH_FAST", "1") != "0",
         "bench_scales": os.environ.get("BENCH_SCALES", ""),
-        "modules": payloads,
+        # The top-level metadata describes THIS run; merged-in modules
+        # not listed here keep numbers from whatever run produced them.
+        "modules_from_this_run": sorted(payloads),
+        "modules": modules,
     }
     try:
         import jax
         doc["jax"] = jax.__version__
         doc["backend"] = jax.default_backend()
+    except Exception:
+        pass
+    try:
+        from repro.kernels import ops as kops
+        doc["interpret_mode"] = kops.interpret_mode()
+        doc["interpret_mode_source"] = kops.interpret_mode_source()
     except Exception:
         pass
     with open(BENCH_JSON, "w") as f:

@@ -19,26 +19,26 @@ from repro.core.distributed_bfs import gather_result, make_dist_bfs, shard_graph
 from repro.core.graph_build import csr_to_edge_arrays
 from repro.core.reference import reference_bfs
 from repro.core.reorder import relabel_edges
+from repro.util import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("group", "member"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
+mesh = make_mesh((2, 4), ("group", "member"))
+print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
 edges = generate_edges(5, 12)
 g0 = build_csr(edges)
 r = degree_reorder(g0.degree)          # T2a: heavy vertices get low ids
 g = build_csr(relabel_edges(edges, r))
 src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
-sg = shard_graph(src, dst, valid, g.num_vertices, 8)  # eq.3 cyclic owners
+sg = shard_graph(src, dst, valid, g.num_vertices, 8)  # block word owners
 print(f"graph: {g.num_vertices} vertices, {int(g.nnz)} directed edges, "
-      f"{sg.src.shape[1]} edges/device")
+      f"{sg.n_chunks}x{sg.chunk_size} edge chunks/device")
 
-for hierarchical in (True, False):
-    bfs = make_dist_bfs(mesh, sg, hierarchical=hierarchical)
+for exchange in ("hier_or", "hier_gather", "flat"):
+    bfs = make_dist_bfs(mesh, sg, exchange=exchange)
     res = bfs(jnp.int32(0))
     parent, level = gather_result(res, sg)
     _, l_ref = reference_bfs(np.asarray(g.row_offsets),
                              np.asarray(g.col_indices), 0)
     ok = np.array_equal(level[:g.num_vertices], l_ref)
-    mode = "monitor (hierarchical)" if hierarchical else "flat all-gather"
-    print(f"{mode:26s}: levels={int(res.levels_run)} match_oracle={ok}")
+    print(f"exchange={exchange:12s}: levels={int(res.levels_run)} "
+          f"match_oracle={ok}")

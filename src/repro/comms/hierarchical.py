@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.util import axis_size, shard_map
+
 
 # ---------------------------------------------------------------------------
 # In-shard_map primitives. Axis names refer to mesh axes bound by shard_map.
@@ -55,8 +57,8 @@ def hierarchical_all_to_all(
     destination *member index* is m — the monitor collection step.
     Phase 2 (mirror group): monitors exchange across groups.
     """
-    g = lax.axis_size(group_axis)
-    m = lax.axis_size(member_axis)
+    g = axis_size(group_axis)
+    m = axis_size(member_axis)
     shape = x.shape
     blocks = shape[split_axis]
     assert blocks % (g * m) == 0, (blocks, g, m)
@@ -92,7 +94,7 @@ def hierarchical_psum(x, group_axis: str, member_axis: str):
     Equal to ``psum(x, (group, member))`` but each inter-group link carries
     1/M of the gradient bytes (the monitor forwards its shard only).
     """
-    m = lax.axis_size(member_axis)
+    m = axis_size(member_axis)
     lead = x.shape[0]
     if lead % m != 0:
         # fall back: reduce within group first, then across (still 2-phase)
@@ -107,8 +109,17 @@ def compressed_hierarchical_psum(x, group_axis: str, member_axis: str,
                                  compress_dtype=jnp.bfloat16):
     """Hierarchical psum with lossy compression on the *inter-group* leg only
     (gradient compression across the expensive links; intra-group stays
-    full precision)."""
-    m = lax.axis_size(member_axis)
+    full precision).
+
+    Integer and boolean payloads (bitmap words, counters, ids) never take
+    the float compress cast: rounding a ``uint32`` bitmap word through
+    bfloat16 silently clears bits.  They go through the exact
+    :func:`hierarchical_psum` instead — same two-phase hop structure,
+    lossless.
+    """
+    if jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_:
+        return hierarchical_psum(x, group_axis, member_axis)
+    m = axis_size(member_axis)
     lead = x.shape[0]
     orig = x.dtype
     if lead % m != 0:
@@ -116,6 +127,60 @@ def compressed_hierarchical_psum(x, group_axis: str, member_axis: str,
         return lax.psum(x.astype(compress_dtype), group_axis).astype(orig)
     shard = lax.psum_scatter(x, member_axis, scatter_dimension=0, tiled=True)
     shard = lax.psum(shard.astype(compress_dtype), group_axis).astype(orig)
+    return lax.all_gather(shard, member_axis, axis=0, tiled=True)
+
+
+def _or_reduce_scatter(x, axis_name: str):
+    """Bitwise-OR reduce-scatter over one mesh axis (tiled, dim 0).
+
+    There is no OR flavor of ``lax.psum_scatter``, so the same traffic
+    pattern is built from its primitive decomposition: all-to-all the
+    destination-major blocks, then fold OR locally.  Bytes on the wire are
+    identical to ``psum_scatter`` (each device sends lead/n to each peer).
+    """
+    n = axis_size(axis_name)
+    lead = x.shape[0]
+    assert lead % n == 0, (lead, n)
+    blocks = x.reshape(n, lead // n, *x.shape[1:])
+    blocks = lax.all_to_all(blocks, axis_name, split_axis=0, concat_axis=0,
+                            tiled=False)
+    out = blocks[0]
+    for i in range(1, n):
+        out = out | blocks[i]
+    return out
+
+
+def _or_all_reduce(x, axis_name: str):
+    """Bitwise-OR all-reduce over one mesh axis (gather + local fold)."""
+    n = axis_size(axis_name)
+    g = lax.all_gather(x, axis_name, axis=0, tiled=False)
+    out = g[0]
+    for i in range(1, n):
+        out = out | g[i]
+    return out
+
+
+def hierarchical_por(x, group_axis: str, member_axis: str):
+    """Lossless bitwise-OR hierarchical all-reduce for bitmap payloads.
+
+    The integer/bitmap analogue of :func:`hierarchical_psum` — the T3
+    monitor aggregation of the per-level BFS delta bitmaps (Lv et al.'s
+    compression-and-sieve inter-group leg, arXiv:1208.5542, with OR as the
+    sieve): OR-reduce-scatter over ``member`` (intra-group collection),
+    OR all-reduce over ``group`` (mirror-group exchange of the 1/M shard),
+    all-gather over ``member`` (delivery).  Exact for uint32 words —
+    nothing round-trips through a float dtype.
+    """
+    if not (jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_):
+        raise TypeError(f"hierarchical_por is for integer/bool payloads, "
+                        f"got {x.dtype}")
+    m = axis_size(member_axis)
+    if x.shape[0] % m != 0:
+        # fall back: OR within group first, then across (still two-phase)
+        x = _or_all_reduce(x, member_axis)
+        return _or_all_reduce(x, group_axis)
+    shard = _or_reduce_scatter(x, member_axis)
+    shard = _or_all_reduce(shard, group_axis)
     return lax.all_gather(shard, member_axis, axis=0, tiled=True)
 
 
@@ -151,7 +216,7 @@ def all_to_all_spmd(mesh: Mesh, group_axis: str = "group",
         return flat_all_to_all(x, axes)
 
     return jax.jit(
-        jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
+        shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
     )
 
 
@@ -171,6 +236,6 @@ def psum_spmd(mesh: Mesh, group_axis: str = "group", member_axis: str = "member"
         return r[None]
 
     return jax.jit(
-        jax.shard_map(local, mesh=mesh, in_specs=P((group_axis, member_axis)),
-                      out_specs=P((group_axis, member_axis)))
+        shard_map(local, mesh=mesh, in_specs=P((group_axis, member_axis)),
+                  out_specs=P((group_axis, member_axis)))
     )

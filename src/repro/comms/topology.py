@@ -165,6 +165,33 @@ def elect_monitors(
     return MonitorPlan(topology=t, monitors=mon, policy=policy)
 
 
+def plan_device_mesh(
+    n_devices: int,
+    topology: TreeTopology | None = None,
+) -> tuple[int, int]:
+    """Factor ``n_devices`` into the (group, member) mesh shape for the
+    vertex-sharded BFS engine (paper T3 mapped onto mesh axes).
+
+    The member axis models one router group: its size is the largest
+    divisor of ``n_devices`` not exceeding the topology's ``group_size``
+    (default fanouts: 4 nodes per HFR-E router) — members fill a router
+    before a second router is used, exactly as nodes do on the machine.
+    Everything above rides the group axis, the inter-group (monitor
+    mirror) phase of the two-phase collective.  Default topology:
+    1 -> (1, 1), 2 -> (1, 2), 4 -> (1, 4), 8 -> (2, 4), 512 -> (128, 4).
+    """
+    t = topology or TreeTopology()
+    gs = t.group_size
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    member = 1
+    for cand in range(min(gs, n_devices), 0, -1):
+        if n_devices % cand == 0:
+            member = cand
+            break
+    return n_devices // member, member
+
+
 def simulate_messages(
     n_messages: int,
     topology: TreeTopology,

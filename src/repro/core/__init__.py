@@ -11,9 +11,13 @@ from repro.core.heavy import (
 from repro.core.bfs_steps import (
     ChunkedEdgeView, EdgeView, chunk_edge_view, edge_view,
 )
-from repro.core.hybrid_bfs import BFSResult, bfs_batch, hybrid_bfs
+from repro.core.hybrid_bfs import (
+    BFSResult, bfs_batch, bfs_batch_sharded, hybrid_bfs,
+)
 from repro.core.validate import validate
-from repro.core.teps import run_graph500, run_graph500_batched, traversed_edges
+from repro.core.teps import (
+    run_graph500, run_graph500_batched, run_graph500_sharded, traversed_edges,
+)
 from repro.core.pipeline import Graph500Config, build, run
 
 __all__ = [
@@ -23,7 +27,8 @@ __all__ = [
     "HeavyCore", "build_heavy_core", "pack_bitmap", "padded_bitmap_words",
     "unpack_bitmap",
     "ChunkedEdgeView", "EdgeView", "chunk_edge_view", "edge_view",
-    "BFSResult", "bfs_batch", "hybrid_bfs",
-    "validate", "run_graph500", "run_graph500_batched", "traversed_edges",
+    "BFSResult", "bfs_batch", "bfs_batch_sharded", "hybrid_bfs",
+    "validate", "run_graph500", "run_graph500_batched",
+    "run_graph500_sharded", "traversed_edges",
     "Graph500Config", "build", "run",
 ]

@@ -1,29 +1,38 @@
 """Distributed hybrid BFS over a (group, member) device mesh (T2 + T3).
 
-Partitioning (paper §4.2, eq. 3): after degree sorting, vertex v is owned
-cyclically — ``owner(v) = v % P``, local slot ``v // P`` — so heavy
-vertices (low new IDs) spread evenly across ranks, "which effectively
-reduces load imbalance among processes and CNs". Edges are partitioned by
-**destination owner** (bottom-up orientation: each device relaxes the
-edges pointing at its own vertices).
+This module is a thin host-side wrapper around the vertex-sharded
+bitmap-resident engine (``core.hybrid_bfs._run_bitmap_sharded``,
+DESIGN.md §9).  The original engine here carried its own level loop with
+a pack-per-level frontier exchange (``pack_bitmap`` of a bool vector
+inside the loop body, cyclic vertex ownership, owner-major id
+translation on every edge every level); that loop is retired — the
+resident engine keeps all state packed across the whole traversal and
+the per-level exchange is the bitwise-OR two-phase monitor collective.
 
-Per level (all inside one ``shard_map`` + ``lax.while_loop``):
-  1. every device packs its local next-frontier bits;
-  2. the global frontier bitmap is assembled with the *monitor exchange* —
-     ``hierarchical_all_gather``: gather over ``group`` (mirror phase),
-     then over ``member`` (intra-group delivery). The flat variant is kept
-     for the ablation benchmark;
-  3. local edge relaxation against the global frontier bitmap updates the
-     locally-owned parents.
+Partitioning (paper §4.2, adapted): vertex ownership is by contiguous
+*bitmap-word blocks* — device ``d`` (flat group-major mesh index) owns
+words ``[d*W_loc, (d+1)*W_loc)``, i.e. vertices
+``[d*W_loc*32, (d+1)*W_loc*32)`` — so the reduce-scatter shard of the
+two-phase collective IS the owner's resident block, and gathering
+shard results back into global vertex order is a concatenation.  (The
+paper's cyclic ``owner(v) = v % P`` balances heavy vertices instead;
+with word-granular bitmaps the block layout is what keeps the exchange
+and the residency aligned, and the chunked frontier-proportional
+top-down absorbs most of the skew.  See DESIGN.md §9.)
 
-The visited/parent state never leaves its owner — only frontier bitmaps
-travel, V/8 bytes per level, exactly the paper's bitmap communication
-design (§2.3, Ueno et al. bitmap representation).
+Edges are partitioned by **destination owner** (bottom-up orientation:
+each device relaxes the edges pointing at its own vertices) and kept
+src-sorted + chunked per shard so small frontiers skip most of the scan.
 
-This module is exercised two ways:
-  * tests/test_distributed.py runs it on 8 host devices (subprocess);
-  * launch/dryrun.py lowers it for the 256/512-chip production meshes as
-    the ``graph500`` architecture rows of the dry-run table.
+Exercised three ways:
+  * tests/test_distributed.py + tests/test_sharded.py run it on host
+    device meshes (subprocess);
+  * benchmarks/bfs_sharded.py ladders it over mesh shapes.
+
+(launch/dryrun.py's graph500 rows still lower the *retired* cyclic
+pack-per-level structure via the self-contained cost-model copies in
+launch/input_specs.py — a stale model of this engine; porting the
+dry-run cells to the resident layout is an open ROADMAP item.)
 """
 from __future__ import annotations
 
@@ -32,197 +41,182 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.comms.hierarchical import hierarchical_all_gather
-from repro.core.heavy import pack_bitmap
-from repro.util import pytree_dataclass
+from repro.core.bfs_steps import DEFAULT_CHUNKS
+from repro.core.heavy import HeavyCore, padded_bitmap_words
+from repro.core.hybrid_bfs import (
+    MAX_LEVELS,
+    SHARD_EXCHANGES,
+    _run_bitmap_sharded,
+)
+from repro.kernels import ops as kops
+from repro.util import pytree_dataclass, shard_map
 
-MAX_LEVELS = 64
 
-
-@pytree_dataclass(meta=("num_vertices", "n_devices"))
+@pytree_dataclass(meta=("num_vertices", "v_orig", "n_devices", "n_chunks",
+                        "chunk_size", "w_loc"))
 class ShardedGraph:
-    """Edge lists pre-partitioned by destination owner, stacked [P, E_loc]."""
+    """Dst-owned, per-shard-chunked edge partition (block vertex ownership).
 
-    src: jax.Array      # [P, E_loc] int32 global src id (sentinel V pads)
-    dst_local: jax.Array  # [P, E_loc] int32 local slot of dst on owner
-    valid: jax.Array    # [P, E_loc] bool
+    ``num_vertices`` is the padded global count ``P * W_loc * 32``; ids in
+    ``[v_orig, num_vertices)`` never appear in edges and stay unvisited.
+    """
+
+    src: jax.Array           # [P, n_chunks, chunk_size] int32 global src ids
+    dst_local: jax.Array     # [P, n_chunks, chunk_size] int32 owned local slot
+    valid: jax.Array         # [P, n_chunks, chunk_size] bool
+    src_lo: jax.Array        # [P, n_chunks] int32 — min valid src per chunk
+    src_hi: jax.Array        # [P, n_chunks] int32 — max valid src (-1 empty)
     degree_local: jax.Array  # [P, V_loc] int32 degree of owned vertices
-    num_vertices: int   # padded global V (multiple of 32 * P)
+    n_active: jax.Array      # [] int32 — global non-isolated vertex count
+    num_vertices: int        # padded global V (= P * W_loc * 32)
+    v_orig: int              # true vertex count before padding
     n_devices: int
+    n_chunks: int
+    chunk_size: int
+    w_loc: int               # bitmap words owned per device
 
 
-def shard_graph(src, dst, valid, num_vertices: int, n_devices: int) -> ShardedGraph:
-    """Host-side partitioner: cyclic ownership, destination-owner edge split."""
+def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
+                n_chunks: int = DEFAULT_CHUNKS) -> ShardedGraph:
+    """Host-side partitioner: block word ownership, dst-owner edge split,
+    per-shard src-sorted chunks with source ranges."""
     import numpy as np
 
     p = n_devices
-    v_pad = ((num_vertices + 32 * p - 1) // (32 * p)) * (32 * p)
-    src = np.asarray(src); dst = np.asarray(dst); valid = np.asarray(valid)
-    owner = dst % p
-    counts = np.bincount(owner[valid], minlength=p)
+    w_base = padded_bitmap_words(num_vertices)
+    w_loc = -(-w_base // p)
+    v_loc = w_loc * 32
+    v_pad = p * v_loc
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    valid = np.asarray(valid)
+    owner = np.where(valid, dst // v_loc, p)
+    counts = np.bincount(owner[valid], minlength=p)[:p]
     e_loc = int(counts.max()) if counts.size else 1
-    e_loc = max(1, ((e_loc + 127) // 128) * 128)
-    s = np.full((p, e_loc), v_pad, np.int32)
-    dl = np.full((p, e_loc), 0, np.int32)
-    va = np.zeros((p, e_loc), bool)
-    fill = np.zeros(p, np.int64)
+    chunk_size = max(128, -(-e_loc // n_chunks))
+    e_pad = n_chunks * chunk_size
+
+    s = np.full((p, e_pad), v_pad, np.int32)
+    dl = np.zeros((p, e_pad), np.int32)
+    va = np.zeros((p, e_pad), bool)
     for pe in range(p):
         sel = valid & (owner == pe)
         k = int(sel.sum())
+        # csr_to_edge_arrays emits (src, dst)-sorted edges; the boolean
+        # select preserves that order, so each shard's slice stays
+        # src-sorted and contiguous chunks cover contiguous src bands.
         s[pe, :k] = src[sel]
-        dl[pe, :k] = dst[sel] // p
+        dl[pe, :k] = dst[sel] - pe * v_loc
         va[pe, :k] = True
-        fill[pe] = k
-    v_loc = v_pad // p
+    s = s.reshape(p, n_chunks, chunk_size)
+    dl = dl.reshape(p, n_chunks, chunk_size)
+    va = va.reshape(p, n_chunks, chunk_size)
+    src_lo = np.where(va, s, v_pad).min(axis=2).astype(np.int32)
+    src_hi = np.where(va, s, -1).max(axis=2).astype(np.int32)
+
     deg = np.zeros((p, v_loc), np.int32)
-    np.add.at(deg, (owner[valid], dst[valid] // p), 1)
+    np.add.at(deg, (owner[valid], dst[valid] % v_loc), 1)
+    n_active = int((np.bincount(dst[valid], minlength=num_vertices) > 0).sum())
     return ShardedGraph(
         src=jnp.asarray(s), dst_local=jnp.asarray(dl), valid=jnp.asarray(va),
-        degree_local=jnp.asarray(deg), num_vertices=v_pad, n_devices=p,
+        src_lo=jnp.asarray(src_lo), src_hi=jnp.asarray(src_hi),
+        degree_local=jnp.asarray(deg), n_active=jnp.int32(n_active),
+        num_vertices=v_pad, v_orig=num_vertices, n_devices=p,
+        n_chunks=n_chunks, chunk_size=chunk_size, w_loc=w_loc,
     )
 
 
 class DistBFSResult(NamedTuple):
-    parent: jax.Array  # [P, V_loc] int32 global parent id (-1 unvisited)
-    level: jax.Array   # [P, V_loc]
-    levels_run: jax.Array
-
-
-def _local_level(src, dst_local, valid, frontier_bm, parent_loc, v_pad):
-    """Relax local edges against the global frontier bitmap."""
-    word = frontier_bm[jnp.clip(src // 32, 0, frontier_bm.shape[0] - 1)]
-    in_frontier = ((word >> (src % 32).astype(jnp.uint32)) & jnp.uint32(1)).astype(bool)
-    unvisited = parent_loc == v_pad
-    active = valid & in_frontier & unvisited[dst_local]
-    cand = jnp.where(active, src, v_pad).astype(jnp.int32)
-    tgt = jnp.where(active, dst_local, parent_loc.shape[0])
-    new_parent = jnp.concatenate([parent_loc, jnp.full((1,), v_pad, jnp.int32)])
-    new_parent = new_parent.at[tgt].min(cand)[:-1]
-    newly = (new_parent != v_pad) & unvisited
-    return new_parent, newly
+    parent: jax.Array      # [V_pad] int32 global parent id (-1 unvisited)
+    level: jax.Array       # [V_pad] int32 (-1 unvisited)
+    levels_run: jax.Array  # [] int32
 
 
 def make_dist_bfs(
     mesh: Mesh,
     g: ShardedGraph,
     *,
-    group_axis="group",
-    member_axis="member",
+    group_axis: str = "group",
+    member_axis: str = "member",
     hierarchical: bool = True,
+    exchange: str | None = None,
+    core: HeavyCore | None = None,
+    alpha: float = 14.0,
+    beta: float = 24.0,
     max_levels: int = MAX_LEVELS,
+    batched: bool = False,
 ):
-    """Build the jitted distributed BFS fn(root) for a pre-sharded graph.
+    """Build the jitted vertex-sharded BFS for a pre-sharded graph.
 
-    ``group_axis``/``member_axis`` may be single names or tuples of mesh
-    axis names (e.g. group=("pod", "data"), member="model" on the
-    multi-pod production mesh)."""
-    p = g.n_devices
-    v_pad = g.num_vertices
-    v_loc = v_pad // p
-    gaxes = group_axis if isinstance(group_axis, tuple) else (group_axis,)
-    maxes = member_axis if isinstance(member_axis, tuple) else (member_axis,)
-    axes = gaxes + maxes
+    Returns ``fn(root) -> DistBFSResult`` (or ``fn(roots[R])`` with a
+    leading roots axis when ``batched=True`` — all search keys in one
+    SPMD program, the mesh analogue of ``bfs_batch``).
 
-    def _flat_index(names):
-        idx = jnp.int32(0)
-        for n in names:
-            idx = idx * lax.axis_size(n) + lax.axis_index(n)
-        return idx
+    ``exchange`` selects the delta-combination wiring
+    (``hier_or`` | ``hier_gather`` | ``flat``); when None it follows the
+    ``hierarchical`` flag (kept for the ablation benchmark and API
+    compatibility with the retired engine).
+    """
+    if exchange is None:
+        exchange = "hier_or" if hierarchical else "flat"
+    if exchange not in SHARD_EXCHANGES:
+        raise ValueError(
+            f"unknown exchange {exchange!r}; expected one of {SHARD_EXCHANGES}")
+    axes = (group_axis, member_axis)
+    n_dev = g.n_devices
+    assert n_dev == mesh.shape[group_axis] * mesh.shape[member_axis], (
+        n_dev, dict(mesh.shape))
+    use_core = core is not None
 
-    def local_bfs(root, src, dst_local, valid):
-        # device coordinates -> global device index (cyclic owner id)
-        gi = _flat_index(gaxes)
-        mi = _flat_index(maxes)
-        m = 1
-        for n in maxes:
-            m = m * lax.axis_size(n)
-        dev = gi * m + mi
-        src, dst_local, valid = src[0], dst_local[0], valid[0]
+    run_one = functools.partial(
+        _run_bitmap_sharded,
+        alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
+        use_pallas_core=not kops.interpret_mode(),
+        w_loc=g.w_loc, n_dev=n_dev,
+        group_axis=group_axis, member_axis=member_axis, exchange=exchange,
+    )
 
-        parent = jnp.full((v_loc,), v_pad, jnp.int32)
-        is_mine = (root % p) == dev
-        slot = root // p
-        parent = jnp.where(
-            (jnp.arange(v_loc) == slot) & is_mine, root, parent)
-        level = jnp.where(parent != v_pad, 0, -1).astype(jnp.int32)
-        newly = parent != v_pad
+    def local(root, src, dst_local, valid, src_lo, src_hi, degree_local,
+              n_active, core):
+        args = (src[0], dst_local[0], valid[0], src_lo[0], src_hi[0],
+                degree_local[0])
+        if batched:
+            res = jax.vmap(lambda r: run_one(*args, n_active, r, core))(root)
+        else:
+            res = run_one(*args, n_active, root, core)
+        return res.parent, res.level, res.stats.levels
 
-        def exchange(newly_bits):
-            # local new-frontier bits, cyclic layout: bit for local slot i
-            # corresponds to global vertex i*P + dev. We gather the
-            # *local* bitmaps and rely on the same cyclic convention when
-            # testing membership (src // 32 below uses owner-major order).
-            local_bm = pack_bitmap(newly_bits, v_loc // 32)
-            if hierarchical:
-                gathered = hierarchical_all_gather(
-                    local_bm, group_axis, member_axis)
-            else:
-                gathered = lax.all_gather(local_bm, axes, axis=0, tiled=True)
-            return gathered  # [P * v_loc//32] owner-major words
-
-        def cond(st):
-            _, _, _, any_new, lvl = st
-            return any_new & (lvl < max_levels)
-
-        def body(st):
-            parent, level, newly, _, lvl = st
-            frontier_bm = exchange(newly)
-            # owner-major layout: global vertex v = owner * v_loc + slot in
-            # bitmap space; translate edge src (cyclic id) to owner-major.
-            src_owner_major = (src % p) * v_loc + src // p
-            src_om = jnp.where(valid, src_owner_major, p * v_loc)
-            new_parent, newly2 = _local_level(
-                src_om, dst_local, valid, frontier_bm, parent, v_pad)
-            # new_parent currently holds owner-major candidate ids; convert
-            # back to true vertex ids: om = owner * v_loc + slot ->
-            # v = slot * p + owner.
-            won = newly2
-            om = new_parent
-            tru = jnp.where(
-                won, (om % v_loc) * p + om // v_loc, new_parent)
-            parent = jnp.where(won, tru, parent)
-            level = jnp.where(won, lvl, level)
-            any_new = lax.psum(
-                jnp.sum(won.astype(jnp.int32)), axes) > 0
-            return parent, level, won, any_new, lvl + 1
-
-        # any_new starts as an axis-invariant constant (the root exists
-        # somewhere); the loop body replaces it with a global psum.
-        init = (parent, level, newly, jnp.bool_(True), jnp.int32(1))
-        parent, level, _, _, lvl = lax.while_loop(cond, body, init)
-        parent = jnp.where(parent == v_pad, -1, parent)
-        return parent[None], level[None], lvl[None]
-
-    fn = jax.shard_map(
-        local_bfs,
+    fn = shard_map(
+        local,
         mesh=mesh,
-        in_specs=(P(), P(axes), P(axes), P(axes)),
-        out_specs=(P(axes), P(axes), P(axes)),
+        in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P(axes), P(axes),
+                  P(), P()),
+        out_specs=(P(axes) if not batched else P(None, axes),
+                   P(axes) if not batched else P(None, axes),
+                   P()),
+        check=False,
     )
 
     @jax.jit
     def run(root: jax.Array) -> DistBFSResult:
-        parent, level, lvls = fn(root, g.src, g.dst_local, g.valid)
+        root = jnp.asarray(root, jnp.int32)
+        parent, level, lvls = fn(
+            root, g.src, g.dst_local, g.valid, g.src_lo, g.src_hi,
+            g.degree_local, g.n_active, core if use_core else None)
         return DistBFSResult(parent, level, jnp.max(lvls))
 
     return run
 
 
 def gather_result(res: DistBFSResult, g: ShardedGraph):
-    """Reassemble owner-sharded (parent, level) into global vertex order."""
+    """Global (parent, level) in vertex order.
+
+    Block ownership makes this a no-op reassembly: shard outputs
+    concatenate directly into global vertex order (the retired cyclic
+    layout needed a strided scatter here).
+    """
     import numpy as np
 
-    p = g.n_devices
-    v_loc = g.num_vertices // p
-    parent = np.asarray(res.parent)  # [P, V_loc]
-    level = np.asarray(res.level)
-    out_p = np.full(g.num_vertices, -1, np.int64)
-    out_l = np.full(g.num_vertices, -1, np.int64)
-    for dev in range(p):
-        ids = np.arange(v_loc) * p + dev
-        out_p[ids] = parent[dev]
-        out_l[ids] = level[dev]
-    return out_p, out_l
+    return np.asarray(res.parent, np.int64), np.asarray(res.level, np.int64)

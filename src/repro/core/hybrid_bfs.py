@@ -47,6 +47,7 @@ from repro.core.bfs_steps import (
     EdgeView,
     chunk_edge_view,
     chunk_frontier_mask,
+    chunk_range_mask,
     frontier_edge_count,
     masked_relax_step,
     relax_step,
@@ -58,12 +59,34 @@ from repro.core.heavy import (
     testbit,
 )
 from repro.kernels import ops as kops
-from repro.kernels.ref import BIG, core_spmv_ref
+from repro.kernels.bitmap_ops import WORDS_PER_TILE
+from repro.kernels.ref import BIG, core_spmv_ref, popcount_u32
 
 MAX_LEVELS = 64
 TOP_DOWN, BOTTOM_UP = jnp.int32(0), jnp.int32(1)
 
 ENGINES = ("reference", "legacy", "bitmap")
+
+
+def _switch_direction(direction, in_count, vis_count, n_active,
+                      alpha: float, beta: float):
+    """Paper eq. (1)/(2) hybrid switch — the ONE copy of the formula.
+
+    Shared by the legacy, bitmap-resident and vertex-sharded level loops
+    so the engines stay bitwise-locked if the heuristic is ever tuned.
+    """
+    thrv1 = ((n_active - vis_count).astype(jnp.float32)
+             / alpha).astype(jnp.int32)
+    thrv2 = (n_active.astype(jnp.float32) / beta).astype(jnp.int32)
+    return jnp.where(
+        (direction == TOP_DOWN) & (in_count > thrv1),
+        BOTTOM_UP,
+        jnp.where(
+            (direction == BOTTOM_UP) & (in_count < thrv2),
+            TOP_DOWN,
+            direction,
+        ),
+    )
 
 
 class BFSStats(NamedTuple):
@@ -149,17 +172,8 @@ def _run_legacy(
     def body(s: _State):
         in_count = jnp.sum(s.frontier).astype(jnp.int32)
         vis_count = jnp.sum(s.visited).astype(jnp.int32)
-        thrv1 = ((n_active - vis_count).astype(jnp.float32) / alpha).astype(jnp.int32)
-        thrv2 = (n_active.astype(jnp.float32) / beta).astype(jnp.int32)
-        direction = jnp.where(
-            (s.direction == TOP_DOWN) & (in_count > thrv1),
-            BOTTOM_UP,
-            jnp.where(
-                (s.direction == BOTTOM_UP) & (in_count < thrv2),
-                TOP_DOWN,
-                s.direction,
-            ),
-        )
+        direction = _switch_direction(
+            s.direction, in_count, vis_count, n_active, alpha, beta)
 
         if engine == "reference" or not use_core:
             new_parent, nxt = relax_step(ev, s.parent_ext, s.frontier, s.visited)
@@ -377,17 +391,8 @@ def _run_bitmap_impl(
         # done; `alive` masks the state update for roots already finished.
         alive = s.in_count > 0
 
-        thrv1 = ((n_active - s.vis_count).astype(jnp.float32) / alpha).astype(jnp.int32)
-        thrv2 = (n_active.astype(jnp.float32) / beta).astype(jnp.int32)
-        direction = jnp.where(
-            (s.direction == TOP_DOWN) & (s.in_count > thrv1),
-            BOTTOM_UP,
-            jnp.where(
-                (s.direction == BOTTOM_UP) & (s.in_count < thrv2),
-                TOP_DOWN,
-                s.direction,
-            ),
-        )
+        direction = _switch_direction(
+            s.direction, s.in_count, s.vis_count, n_active, alpha, beta)
 
         def bu(_):
             # Dense-core kernel step (consuming the resident bitmap), then
@@ -556,4 +561,379 @@ def bfs_batch(
         chunks, degree, n_active, roots, core if use_core else None,
         alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
         use_pallas_core=not kops.interpret_mode(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer 1 — root-parallel mesh sharding (DESIGN.md §9).
+#
+# The 64 Graph500 search keys are embarrassingly parallel: shard_map the
+# batched bitmap engine over a ("root",) device mesh and each device runs
+# its slice of the roots with ZERO communication.  The graph (chunked edge
+# view, degree, heavy core) is replicated; only the root vector is split.
+# ---------------------------------------------------------------------------
+
+_SHARDED_BATCH_CACHE: dict = {}
+
+
+def _sharded_batch_fn(mesh, root_axis, alpha, beta, use_core, max_levels,
+                      use_pallas_core):
+    """Build (and cache) the jitted shard_map'd batch program for a mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.util import shard_map
+
+    key = (mesh, root_axis, alpha, beta, use_core, max_levels,
+           use_pallas_core)
+    fn = _SHARDED_BATCH_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def local(chunks, degree, n_active, roots, core):
+        return jax.vmap(
+            lambda r: _run_bitmap_impl(
+                chunks, degree, n_active, r, core,
+                alpha=alpha, beta=beta, use_core=use_core,
+                max_levels=max_levels, use_pallas_core=use_pallas_core)
+        )(roots)
+
+    fn = jax.jit(shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(root_axis), P()),
+        out_specs=P(root_axis),
+        check=False,
+    ))
+    _SHARDED_BATCH_CACHE[key] = fn
+    return fn
+
+
+def bfs_batch_sharded(
+    ev: EdgeView,
+    degree: jax.Array,
+    roots,
+    *,
+    mesh,
+    root_axis: str = "root",
+    core: HeavyCore | None = None,
+    alpha: float = 14.0,
+    beta: float = 24.0,
+    max_levels: int = MAX_LEVELS,
+    chunks: ChunkedEdgeView | None = None,
+    n_chunks: int = DEFAULT_CHUNKS,
+) -> BFSResult:
+    """Root-parallel :func:`bfs_batch` over a device mesh (layer 1 sharding).
+
+    Splits ``roots`` across ``mesh``'s ``root_axis`` with the graph
+    replicated — per-root outputs are bitwise-identical to the
+    single-device batch (each root's traversal is an independent program;
+    no collective appears anywhere in the lowering).  ``roots`` is padded
+    with ``roots[0]`` up to a multiple of the axis size and the padding is
+    sliced off the result.
+    """
+    if chunks is None:
+        chunks = chunk_edge_view(ev, n_chunks)
+    n_active = jnp.sum(degree > 0).astype(jnp.int32)
+    roots = jnp.asarray(roots, jnp.int32)
+    n_dev = int(mesh.shape[root_axis])
+    n = roots.shape[0]
+    pad = (-n) % n_dev
+    if pad:
+        roots = jnp.concatenate([roots, jnp.broadcast_to(roots[:1], (pad,))])
+    use_core = core is not None
+    fn = _sharded_batch_fn(mesh, root_axis, alpha, beta, use_core,
+                           max_levels, not kops.interpret_mode())
+    res = fn(chunks, degree, n_active, roots, core if use_core else None)
+    if pad:
+        res = jax.tree_util.tree_map(lambda x: x[:n], res)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Layer 2 — vertex-sharded resident bitmaps (DESIGN.md §9, paper T3).
+#
+# One giant traversal spans a (group, member) mesh.  Ownership is by
+# contiguous BITMAP-WORD blocks: device d (flat index, group-major) owns
+# words [d*W_loc, (d+1)*W_loc) == vertices [d*W_loc*32, (d+1)*W_loc*32).
+# Each shard holds:
+#   * parent/level/visited for its owned vertices only (resident, packed);
+#   * the edge chunks whose DESTINATION it owns (bottom-up orientation,
+#     paper §4.2 — each device relaxes the edges pointing at its own
+#     vertices), src-sorted and chunked for frontier-proportional TD;
+#   * a replicated view of the current frontier bitmap (the only state
+#     that travels).
+# Per level the shard packs its newly-found delta words and the global
+# next frontier is the bitwise-OR combination of all shards' deltas —
+# routed through the T3 two-phase monitor collective
+# (comms.hierarchical.hierarchical_por: OR-reduce-scatter over member,
+# OR-exchange over group, all-gather over member).  Comms volume is
+# V/8 bytes per level per device, like the paper's bitmap exchange.
+# ---------------------------------------------------------------------------
+
+SHARD_EXCHANGES = ("hier_or", "hier_gather", "flat")
+
+
+def _shard_index(group_axis: str, member_axis: str):
+    """Flat device index (group-major) of this shard inside shard_map."""
+    from repro.util import axis_size
+
+    gi = jax.lax.axis_index(group_axis)
+    mi = jax.lax.axis_index(member_axis)
+    return gi * axis_size(member_axis) + mi
+
+
+def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
+                    group_axis, member_axis):
+    """Combine per-shard delta words into the full next-frontier bitmap.
+
+    Delta bits live only in the owner's word block (dst-owned edges find
+    owned vertices), so OR-combining the blocks reassembles the global
+    frontier exactly.  Three wirings, all bit-identical:
+
+      * ``hier_or``     — scatter the block into a zero full-width vector
+        and run the T3 two-phase bitwise-OR reduction
+        (:func:`~repro.comms.hierarchical.hierarchical_por`).  This is the
+        general form: it stays correct if a future edge partition lets
+        shards produce overlapping deltas.
+      * ``hier_gather`` — two-phase hierarchical all-gather of the blocks
+        (1/M inter-group bytes; exploits disjointness).
+      * ``flat``        — single-phase all-gather (the ablation baseline).
+    """
+    from repro.comms.hierarchical import (
+        hierarchical_all_gather,
+        hierarchical_por,
+    )
+
+    axes = (group_axis, member_axis)
+    if exchange == "hier_or":
+        full = jnp.zeros((n_dev * w_loc,), jnp.uint32)
+        full = jax.lax.dynamic_update_slice(full, delta_loc, (dev * w_loc,))
+        return hierarchical_por(full, group_axis, member_axis)
+    if exchange == "hier_gather":
+        return hierarchical_all_gather(delta_loc, group_axis, member_axis)
+    if exchange == "flat":
+        return jax.lax.all_gather(delta_loc, axes, axis=0, tiled=True)
+    raise ValueError(
+        f"unknown exchange {exchange!r}; expected one of {SHARD_EXCHANGES}")
+
+
+class _ShardState(NamedTuple):
+    parent_loc: jax.Array    # [V_loc+1] int32, global parent ids, sentinel V
+    level_loc: jax.Array     # [V_loc] int32
+    frontier_bm: jax.Array   # [W] uint32 — full width, replicated value
+    visited_loc: jax.Array   # [W_loc] uint32 — resident, owned words only
+    in_count: jax.Array      # [] int32 — global popcount(frontier)
+    vis_count: jax.Array     # [] int32 — global
+    m_f: jax.Array           # [] int32 — global frontier degree sum
+    deg_vis: jax.Array       # [] int32 — global visited degree sum
+    lvl: jax.Array
+    direction: jax.Array
+    stats_dir: jax.Array
+    stats_fs: jax.Array
+    stats_se: jax.Array
+    stats_ch: jax.Array
+
+
+def _relax_owned_edges(sc, dst_loc, vc, frontier_bm, visited_loc,
+                       parent_loc, v_loc, sentinel):
+    """Edge-parallel relax of dst-owned edges against the full frontier.
+
+    ``sc`` holds global source ids (frontier membership is a bit gather
+    from the replicated frontier bitmap), ``dst_loc`` local owned slots
+    (visited test against the resident owned words; scatter-min into the
+    owned parent block).  The sharded sibling of :func:`_relax_edges`.
+    """
+    active = (vc & testbit(frontier_bm, jnp.clip(sc, 0, sentinel - 1))
+              & ~testbit(visited_loc, jnp.clip(dst_loc, 0, v_loc - 1)))
+    cand = jnp.where(active, sc, sentinel).astype(jnp.int32)
+    tgt = jnp.where(active, dst_loc, v_loc)
+    return parent_loc.at[tgt].min(cand)
+
+
+def _run_bitmap_sharded(
+    src: jax.Array,        # [n_chunks, chunk_size] int32 — global src ids
+    dst_loc: jax.Array,    # [n_chunks, chunk_size] int32 — owned local slots
+    valid: jax.Array,      # [n_chunks, chunk_size] bool
+    src_lo: jax.Array,     # [n_chunks] int32
+    src_hi: jax.Array,     # [n_chunks] int32
+    degree_loc: jax.Array, # [V_loc] int32 — degree of owned vertices
+    n_active: jax.Array,   # [] int32 — global
+    root: jax.Array,       # [] int32 — global id
+    core: HeavyCore | None,
+    *,
+    alpha: float,
+    beta: float,
+    use_core: bool,
+    max_levels: int,
+    use_pallas_core: bool,
+    w_loc: int,
+    n_dev: int,
+    group_axis: str = "group",
+    member_axis: str = "member",
+    exchange: str = "hier_or",
+) -> BFSResult:
+    """Vertex-sharded bitmap-resident BFS — runs INSIDE ``shard_map``.
+
+    The sharded sibling of :func:`_run_bitmap_impl`: same invariants
+    (I1–I4, DESIGN.md §3) with residency per owned word block and one
+    hierarchical delta exchange per level (DESIGN.md §9).  Returns the
+    shard's slice of the result (parent/level for owned vertices) plus
+    replicated stats; parents are bitwise-identical to the single-device
+    engine.
+    """
+    axes = (group_axis, member_axis)
+    v_loc = w_loc * 32
+    v_pad = n_dev * v_loc          # sentinel (padded global vertex count)
+    w_pad = n_dev * w_loc
+    n_chunks = src.shape[0]
+    dev = _shard_index(group_axis, member_axis)
+    start = dev * v_loc
+
+    # --- init: the root bit is set once; owner holds parent/level/visited.
+    root_slot = root - start
+    is_mine = (root >= start) & (root < start + v_loc)
+    slots = jnp.arange(v_loc, dtype=jnp.int32)
+    parent_loc = jnp.where((slots == root_slot) & is_mine, root,
+                           jnp.int32(v_pad))
+    parent_loc = jnp.concatenate(
+        [parent_loc, jnp.full((1,), v_pad, jnp.int32)])
+    level_loc = jnp.where((slots == root_slot) & is_mine, 0, -1)
+    level_loc = level_loc.astype(jnp.int32)
+    root_bit = jnp.uint32(1) << (root % 32).astype(jnp.uint32)
+    frontier_bm = jnp.zeros((w_pad,), jnp.uint32).at[root // 32].set(root_bit)
+    word_slot = jnp.clip(root_slot // 32, 0, w_loc - 1)
+    visited_loc = jnp.where(
+        jnp.arange(w_loc) == word_slot,
+        jnp.where(is_mine, root_bit, jnp.uint32(0)),
+        jnp.uint32(0),
+    )
+    deg_root = jax.lax.psum(
+        jnp.where(is_mine,
+                  degree_loc[jnp.clip(root_slot, 0, v_loc - 1)],
+                  0).astype(jnp.int32), axes)
+    nnz_total = jax.lax.psum(jnp.sum(degree_loc).astype(jnp.int32), axes)
+
+    # Flat views for bottom-up (nothing to skip when the frontier is big);
+    # the dense core covers (src < K) & (dst < K), so shards whose range
+    # intersects the core drop those edges from their tail.
+    src_flat = src.reshape(-1)
+    dst_flat = dst_loc.reshape(-1)
+    if use_core:
+        dst_global = dst_loc + start
+        tail_flat = (valid
+                     & ~((src < core.k) & (dst_global < core.k))
+                     ).reshape(-1)
+    else:
+        tail_flat = valid.reshape(-1)
+
+    def core_step(frontier, visited, parent):
+        """Dense-core bottom-up: full-core SpMV (replicated work), winners
+        applied to owned rows only."""
+        k = core.k
+        spmv = kops.core_spmv if use_pallas_core else core_spmv_ref
+        cand = spmv(core.a_core, frontier[: k // 32])
+        rows = jnp.arange(k, dtype=jnp.int32)
+        rloc = rows - start
+        owned = (rloc >= 0) & (rloc < v_loc)
+        rloc_c = jnp.clip(rloc, 0, v_loc - 1)
+        won = (cand < BIG) & owned & ~testbit(visited, rloc_c)
+        tgt = jnp.where(won, rloc_c, v_loc)
+        return parent.at[tgt].min(
+            jnp.where(won, cand, v_pad).astype(jnp.int32))
+
+    def chunked_td(frontier, visited, parent):
+        live = chunk_range_mask(src_lo, src_hi, frontier)
+
+        def body(c, carry):
+            def relax(carry):
+                p, nsc = carry
+                sc = jax.lax.dynamic_index_in_dim(src, c, 0, keepdims=False)
+                dc = jax.lax.dynamic_index_in_dim(dst_loc, c, 0,
+                                                  keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(valid, c, 0, keepdims=False)
+                p = _relax_owned_edges(sc, dc, vc, frontier, visited, p,
+                                       v_loc, v_pad)
+                return p, nsc + 1
+
+            return jax.lax.cond(live[c], relax, lambda x: x, carry)
+
+        return jax.lax.fori_loop(0, n_chunks, body, (parent, jnp.int32(0)))
+
+    def cond(s: _ShardState):
+        return (s.in_count > 0) & (s.lvl < max_levels)
+
+    def body(s: _ShardState):
+        alive = s.in_count > 0   # batched-roots guard (vmap over roots)
+
+        direction = _switch_direction(
+            s.direction, s.in_count, s.vis_count, n_active, alpha, beta)
+
+        def bu(_):
+            p1 = (core_step(s.frontier_bm, s.visited_loc, s.parent_loc)
+                  if use_core else s.parent_loc)
+            p2 = _relax_owned_edges(
+                src_flat, dst_flat, tail_flat, s.frontier_bm, s.visited_loc,
+                p1, v_loc, v_pad)
+            return p2, jnp.int32(n_chunks)
+
+        def td(_):
+            return chunked_td(s.frontier_bm, s.visited_loc, s.parent_loc)
+
+        new_parent, nsc = jax.lax.cond(direction == BOTTOM_UP, bu, td, None)
+
+        # Epilogue: pack the owned delta words (I3), OR-combine across the
+        # mesh (T3 two-phase), fuse the owned-slice mask/merge/popcount.
+        newly = (new_parent[:v_loc] != v_pad) & (s.parent_loc[:v_loc] == v_pad)
+        delta_loc = _pack_delta_words(newly, w_loc)
+        next_bm = _exchange_delta(
+            delta_loc, dev, w_loc, n_dev, exchange=exchange,
+            group_axis=group_axis, member_axis=member_axis)
+        in_count = jnp.sum(popcount_u32(next_bm)).astype(jnp.int32)
+        if w_loc % WORDS_PER_TILE == 0:
+            _, new_visited_loc, _ = kops.frontier_update(
+                delta_loc, s.visited_loc)
+        else:
+            # owned word blocks below the kernel tile: plain fused OR
+            # (delta bits are never already-visited — owner exactness).
+            new_visited_loc = s.visited_loc | delta_loc
+
+        new_level = jnp.where(newly, s.lvl + 1, s.level_loc)
+        m_next = jax.lax.psum(
+            jnp.sum(jnp.where(newly, degree_loc, 0)).astype(jnp.int32), axes)
+        nsc_all = jax.lax.psum(nsc, axes)
+
+        m_u = nnz_total - s.deg_vis
+        scanned = jnp.where(direction == TOP_DOWN, s.m_f, m_u).astype(jnp.int32)
+
+        nxt = _ShardState(
+            new_parent, new_level, next_bm, new_visited_loc,
+            in_count, s.vis_count + in_count,
+            m_next, s.deg_vis + m_next,
+            s.lvl + 1, direction,
+            s.stats_dir.at[s.lvl].set(direction),
+            s.stats_fs.at[s.lvl].set(s.in_count),
+            s.stats_se.at[s.lvl].set(scanned),
+            s.stats_ch.at[s.lvl].set(nsc_all),
+        )
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(alive, new, old), nxt, s)
+
+    init = _ShardState(
+        parent_loc, level_loc, frontier_bm, visited_loc,
+        jnp.int32(1), jnp.int32(1), deg_root, deg_root,
+        jnp.int32(0), TOP_DOWN,
+        jnp.full((max_levels,), -1, jnp.int32),
+        jnp.zeros((max_levels,), jnp.int32),
+        jnp.zeros((max_levels,), jnp.int32),
+        jnp.full((max_levels,), -1, jnp.int32),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    parent = jnp.where(s.parent_loc[:v_loc] == v_pad, -1, s.parent_loc[:v_loc])
+    return BFSResult(
+        parent=parent,
+        level=s.level_loc,
+        stats=BFSStats(
+            s.stats_dir, s.stats_fs, s.stats_se, s.lvl,
+            s.stats_ch, jnp.int32(n_chunks),
+        ),
     )

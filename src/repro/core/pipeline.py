@@ -45,6 +45,9 @@ class Graph500Config:
     alpha: float = 14.0
     beta: float = 24.0
     batched: bool = False                  # one jitted program for all roots
+    # Mesh sharding (DESIGN.md §9): root_devices > 0 shard_maps the batch
+    # over a ("root",) mesh of that many devices (layer 1, zero comms).
+    root_devices: Optional[int] = None
 
     @staticmethod
     def ladder(rung: str, **kw) -> "Graph500Config":
@@ -61,6 +64,10 @@ class Graph500Config:
                              engine="bitmap"),
             "pre-g500-batch": dict(degree_sort=True, heavy_threshold=100,
                                    engine="bitmap", batched=True),
+            # layer-1 mesh rung: all visible devices unless root_devices set
+            "pre-g500-mesh": dict(degree_sort=True, heavy_threshold=100,
+                                  engine="bitmap", batched=True,
+                                  root_devices=0),
         }
         return Graph500Config(**{**presets[rung], **kw})
 
@@ -104,12 +111,20 @@ def run(cfg: Graph500Config, built: BuiltGraph | None = None) -> tuple[BuiltGrap
     roots = kronecker.sample_roots(cfg.seed, edges, cfg.n_roots)
     if built.reorder is not None:
         roots = built.reorder.new_from_old[roots]
+    if cfg.root_devices is not None and not cfg.batched:
+        raise ValueError("root_devices requires batched=True (the mesh "
+                         "shards the batched harness's root vector)")
     if cfg.batched:
         if cfg.engine != "bitmap":
             raise ValueError("batched harness requires engine='bitmap'")
+        mesh = None
+        if cfg.root_devices is not None:
+            from repro.launch.mesh import make_root_mesh
+            mesh = make_root_mesh(cfg.root_devices or None)
         result = run_graph500_batched(
             built.ev, built.degree, roots,
             core=built.core, alpha=cfg.alpha, beta=cfg.beta,
+            mesh=mesh,
         )
     else:
         result = run_graph500(

@@ -28,7 +28,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bfs_steps import DEFAULT_CHUNKS, EdgeView, chunk_edge_view
-from repro.core.hybrid_bfs import BFSResult, bfs_batch, hybrid_bfs
+from repro.core.hybrid_bfs import (
+    BFSResult,
+    bfs_batch,
+    bfs_batch_sharded,
+    hybrid_bfs,
+)
 from repro.core.validate import validate
 
 
@@ -117,12 +122,20 @@ def run_graph500_batched(
     do_validate: bool = True,
     warmup: bool = True,
     n_chunks: int = DEFAULT_CHUNKS,
+    mesh=None,
+    root_axis: str = "root",
 ) -> Graph500Run:
     """Graph500 steps 3 + 4 with all search keys in one jitted program.
 
     Uses the bitmap engine via :func:`repro.core.hybrid_bfs.bfs_batch`; the
     64 searches share one compilation and one device dispatch.  Per-search
     time is the batch wall-clock / n_roots (see module docstring).
+
+    With ``mesh`` (a device mesh carrying ``root_axis``) the search keys
+    additionally split across devices via
+    :func:`repro.core.hybrid_bfs.bfs_batch_sharded` — root-parallel layer-1
+    sharding, zero communication, per-root outputs bitwise-identical to
+    the single-device batch.
     """
     run = Graph500Run(batched=True)
     roots = np.asarray(roots, dtype=np.int32)
@@ -131,10 +144,15 @@ def run_graph500_batched(
         return run
     chunks = chunk_edge_view(ev, n_chunks)
     kw = dict(core=core, alpha=alpha, beta=beta, chunks=chunks)
+    if mesh is not None:
+        kw.update(mesh=mesh, root_axis=root_axis)
+        batch_fn = bfs_batch_sharded
+    else:
+        batch_fn = bfs_batch
     if warmup:
-        bfs_batch(ev, degree, roots, **kw).parent.block_until_ready()
+        batch_fn(ev, degree, roots, **kw).parent.block_until_ready()
     t0 = time.perf_counter()
-    res = bfs_batch(ev, degree, roots, **kw)
+    res = batch_fn(ev, degree, roots, **kw)
     res.parent.block_until_ready()
     per_root_s = (time.perf_counter() - t0) / n
 
@@ -150,4 +168,67 @@ def run_graph500_batched(
             run.validated.append(bool(validate(ev, single, jnp.int32(int(r))).ok))
         else:
             run.validated.append(True)
+    return run
+
+
+def run_graph500_sharded(
+    mesh,
+    sharded_graph,
+    degree,
+    roots,
+    *,
+    core=None,
+    exchange: str = "hier_or",
+    alpha: float = 14.0,
+    beta: float = 24.0,
+    warmup: bool = True,
+    ev: EdgeView | None = None,
+    do_validate: bool = True,
+) -> Graph500Run:
+    """Timed Graph500 harness over the vertex-sharded engine (layer 2).
+
+    All search keys run batched inside ONE SPMD program spanning the
+    (group, member) mesh: per-search time is batch wall-clock / n_roots,
+    exactly as in :func:`run_graph500_batched`.  ``sharded_graph`` comes
+    from :func:`repro.core.distributed_bfs.shard_graph`; ``degree`` is the
+    global (unsharded) degree vector used for the TEPS edge count.
+    Spec validation (step 4) runs per root when ``ev`` (the unsharded
+    edge view) is provided and ``do_validate`` is on; without ``ev`` the
+    checks cannot run, so ``validated`` stays empty and ``all_valid``
+    reports False rather than vacuously True.
+    """
+    from repro.core.distributed_bfs import make_dist_bfs
+
+    run = Graph500Run(batched=True)
+    roots = np.asarray(roots, dtype=np.int32)
+    n = len(roots)
+    if n == 0:
+        return run
+    fn = make_dist_bfs(mesh, sharded_graph, exchange=exchange, core=core,
+                       alpha=alpha, beta=beta, batched=True)
+    roots_j = jnp.asarray(roots)
+    if warmup:
+        fn(roots_j).parent.block_until_ready()
+    t0 = time.perf_counter()
+    res = fn(roots_j)
+    res.parent.block_until_ready()
+    per_root_s = (time.perf_counter() - t0) / n
+
+    v = int(degree.shape[0])
+    parent = np.asarray(res.parent)[:, :v]
+    level = np.asarray(res.level)[:, :v]
+    for i in range(n):
+        m = int(traversed_edges(
+            degree,
+            BFSResult(parent=jnp.asarray(parent[i]),
+                      level=jnp.asarray(level[i]), stats=None)))
+        run.times_s.append(per_root_s)
+        run.edges.append(m)
+        run.teps.append(m / per_root_s if per_root_s > 0 else 0.0)
+        if do_validate and ev is not None:
+            single = BFSResult(parent=jnp.asarray(parent[i]),
+                               level=jnp.asarray(level[i]),
+                               stats=None)
+            run.validated.append(
+                bool(validate(ev, single, jnp.int32(int(roots[i]))).ok))
     return run

@@ -21,6 +21,7 @@ from repro.models import gnn, recsys, transformer as T
 from repro.models.gnn import Graph
 from repro.optim import AdamW, cosine
 from repro.train import train_step as TS
+from repro.util import axis_size, shard_map
 
 SDS = jax.ShapeDtypeStruct
 
@@ -522,8 +523,6 @@ def _recsys_flops(cfg, b) -> float:
 # ---------------------------------------------------------------------------
 
 def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") -> CellPlan:
-    from repro.core.distributed_bfs import ShardedGraph, make_dist_bfs
-
     spec = get(arch)
     cell = spec.shape(shape)
     scale, ef = cell.dims["scale"], cell.dims["edge_factor"]
@@ -535,13 +534,14 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
     e_loc = _pad_to(int(1.1 * e_directed / nd), 128)
     v_loc = v_pad // nd
 
-    g_sds = ShardedGraph(
-        src=SDS((nd, e_loc), jnp.int32),
-        dst_local=SDS((nd, e_loc), jnp.int32),
-        valid=SDS((nd, e_loc), jnp.bool_),
-        degree_local=SDS((nd, v_loc), jnp.int32),
-        num_vertices=v_pad, n_devices=nd,
-    )
+    # Abstract cyclic-layout edge shards for the lowering cost model (the
+    # concrete engine lives in core/distributed_bfs + core/hybrid_bfs).
+    class _GSDS:
+        src = SDS((nd, e_loc), jnp.int32)
+        dst_local = SDS((nd, e_loc), jnp.int32)
+        valid = SDS((nd, e_loc), jnp.bool_)
+
+    g_sds = _GSDS()
     if multi:
         gaxes, maxes = ("pod", "data"), ("model",)
     else:
@@ -558,12 +558,13 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
         # and feed PRE-CONVERTED owner-major source ids — kills one
         # E-sized byte stream and two E-sized div/mod ops per level.
         def run_lean(root, src_om, dst_local):
-            fn = jax.shard_map(
+            fn = shard_map(
                 _dist_bfs_local_lean(v_pad, nd, v_loc, gaxes, maxes,
                                      hierarchical),
                 mesh=mesh,
                 in_specs=(P(), P(mesh_axes), P(mesh_axes)),
                 out_specs=(P(mesh_axes), P(mesh_axes)),
+                check=False,
             )
             return fn(root, src_om, dst_local)
 
@@ -573,11 +574,12 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
                         (shard0, shard0), flops, note=f"variant={variant}")
 
     def run(root, src, dst_local, valid):
-        fn = jax.shard_map(
+        fn = shard_map(
             _dist_bfs_local(v_pad, nd, v_loc, gaxes, maxes, hierarchical),
             mesh=mesh,
             in_specs=(P(), P(mesh_axes), P(mesh_axes), P(mesh_axes)),
             out_specs=(P(mesh_axes), P(mesh_axes)),
+            check=False,
         )
         parent, level = fn(root, src, dst_local, valid)
         return parent, level
@@ -593,14 +595,14 @@ def _dist_bfs_local(v_pad, p, v_loc, gaxes, maxes, hierarchical):
     from jax import lax
     from repro.comms.hierarchical import hierarchical_all_gather
     from repro.core.heavy import pack_bitmap
-    from repro.core.distributed_bfs import _local_level
+    from repro.core.bfs_steps import relax_bitmap_local as _local_level
 
     axes = gaxes + maxes
 
     def _flat_index(names):
         idx = jnp.int32(0)
         for n in names:
-            idx = idx * lax.axis_size(n) + lax.axis_index(n)
+            idx = idx * axis_size(n) + lax.axis_index(n)
         return idx
 
     def local_bfs(root, src, dst_local, valid):
@@ -608,7 +610,7 @@ def _dist_bfs_local(v_pad, p, v_loc, gaxes, maxes, hierarchical):
         mi = _flat_index(maxes)
         m = 1
         for n in maxes:
-            m = m * lax.axis_size(n)
+            m = m * axis_size(n)
         dev = gi * m + mi
         src, dst_local, valid = src[0], dst_local[0], valid[0]
         parent = jnp.full((v_loc,), v_pad, jnp.int32)
@@ -654,14 +656,14 @@ def _dist_bfs_local_lean(v_pad, p, v_loc, gaxes, maxes, hierarchical):
     from jax import lax
     from repro.comms.hierarchical import hierarchical_all_gather
     from repro.core.heavy import pack_bitmap
-    from repro.core.distributed_bfs import _local_level
+    from repro.core.bfs_steps import relax_bitmap_local as _local_level
 
     axes = gaxes + maxes
 
     def _flat_index(names):
         idx = jnp.int32(0)
         for n in names:
-            idx = idx * lax.axis_size(n) + lax.axis_index(n)
+            idx = idx * axis_size(n) + lax.axis_index(n)
         return idx
 
     def local_bfs(root, src_om, dst_local):
@@ -669,7 +671,7 @@ def _dist_bfs_local_lean(v_pad, p, v_loc, gaxes, maxes, hierarchical):
         mi = _flat_index(maxes)
         m = 1
         for n in maxes:
-            m = m * lax.axis_size(n)
+            m = m * axis_size(n)
         dev = gi * m + mi
         src_om, dst_local = src_om[0], dst_local[0]
         valid = src_om < p * v_loc          # sentinel encodes validity

@@ -7,18 +7,42 @@ from __future__ import annotations
 
 import jax
 
+from repro.util import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh over host devices (tests / examples)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
+
+
+def make_root_mesh(n_devices: int | None = None, axis: str = "root"):
+    """1-D mesh for the root-parallel Graph500 batch (layer 1 sharding).
+
+    The 64 search keys split across ``axis`` with zero communication —
+    defaults to every visible device.
+    """
+    n = n_devices if n_devices is not None else len(jax.devices())
+    return make_mesh((n,), (axis,))
+
+
+def make_group_mesh(shape=None, group_axis: str = "group",
+                    member_axis: str = "member"):
+    """(group, member) mesh for the vertex-sharded engine (layer 2, T3).
+
+    With ``shape=None`` the shape comes from the interconnect model:
+    ``comms.topology.plan_device_mesh`` sizes the member axis to the
+    router group over all visible devices.
+    """
+    if shape is None:
+        from repro.comms.topology import plan_device_mesh
+        shape = plan_device_mesh(len(jax.devices()))
+    return make_mesh(shape, (group_axis, member_axis))
 
 
 # TPU v5e hardware constants (roofline denominators, spec-mandated).

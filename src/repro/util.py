@@ -2,8 +2,67 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """Version-portable ``shard_map``.
+
+    Newer jax exposes ``jax.shard_map`` (replication checking via
+    ``check_vma``); 0.4.x has ``jax.experimental.shard_map.shard_map``
+    (``check_rep``).  ``check=False`` disables the static replication
+    checker on either API — needed when an ``all_gather`` output is
+    replicated in value but the checker cannot prove it.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+def axis_size(axis_name) -> int:
+    """Version-portable ``lax.axis_size`` (static size of a bound mesh axis).
+
+    jax 0.4.x has no ``lax.axis_size``; ``lax.psum(1, axis)`` of a Python
+    constant folds to a concrete int on every version.
+    """
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axis_names):
+    """Version-portable device mesh over the first ``prod(shape)`` devices.
+
+    Tries ``jax.make_mesh`` with explicit ``Auto`` axis types (newer jax),
+    then without (jax 0.4.35–0.4.38), then falls back to a raw
+    ``jax.sharding.Mesh`` over a device-array reshape.
+    """
+    shape = tuple(int(s) for s in shape)
+    axis_names = tuple(axis_names)
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh shape {shape} needs {n} devices, have {len(devices)}")
+    devices = devices[:n]
+    try:
+        return jax.make_mesh(
+            shape, axis_names, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        pass
+    try:
+        return jax.make_mesh(shape, axis_names, devices=devices)
+    except (AttributeError, TypeError):
+        import numpy as np
+        return jax.sharding.Mesh(np.asarray(devices).reshape(shape),
+                                 axis_names)
 
 
 def pytree_dataclass(cls=None, *, meta: tuple[str, ...] = ()):

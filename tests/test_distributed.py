@@ -27,8 +27,8 @@ PREAMBLE = """
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("group", "member"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.util import make_mesh, shard_map
+mesh = make_mesh((2, 4), ("group", "member"))
 """
 
 
@@ -98,7 +98,7 @@ def local(x, p):
                                    member_axis="member")
     return out
 
-f = jax.jit(jax.shard_map(local, mesh=mesh,
+f = jax.jit(shard_map(local, mesh=mesh,
         in_specs=(P(("group", "member")), P()), out_specs=P(("group", "member"))))
 y = f(x, p)
 assert y.shape == x.shape
@@ -136,11 +136,11 @@ def local_step(params, tokens, labels):
         if g.size % 4 == 0 else jax.lax.psum(g, ("group", "member")), grads)
     return jax.lax.psum(loss, ("group", "member")), grads
 
-# check_vma=False: all_gather output is replicated in VALUE but the
+# check=False: all_gather output is replicated in VALUE but the
 # static varying-axis checker cannot prove it; numerics verified below.
-f = jax.jit(jax.shard_map(local_step, mesh=mesh,
+f = jax.jit(shard_map(local_step, mesh=mesh,
         in_specs=(P(), P(("group", "member")), P(("group", "member"))),
-        out_specs=(P(), P()), check_vma=False))
+        out_specs=(P(), P()), check=False))
 loss, grads = f(params, batch["tokens"], batch["labels"])
 assert np.isfinite(float(loss))
 flat = jax.tree.leaves(grads)
@@ -157,8 +157,8 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.train import checkpoint
 from repro.train.elastic import plan_mesh
-mesh8 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.util import make_mesh
+mesh8 = make_mesh((2, 4), ("data", "model"))
 w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 w8 = jax.device_put(w, NamedSharding(mesh8, P("data", "model")))
 d = tempfile.mkdtemp()
@@ -183,8 +183,8 @@ import jax, jax.numpy as jnp
 from repro.configs import get
 from repro.models import transformer as T
 from repro.data.synthetic import lm_batch
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.util import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(get("granite-moe-1b-a400m").make_smoke_config(),
                           capacity_factor=16.0)
 params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -212,8 +212,8 @@ from repro.models.gnn_dist import make_sage_dist_step
 from repro.data.graphs import make_feature_graph
 from repro.optim import AdamW, constant
 from repro.train.train_step import make_gnn_train_step
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.util import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get("graphsage-reddit").make_smoke_config()
 g, labels = make_feature_graph(0, 9, d_feat=cfg.d_in, n_classes=cfg.n_classes,
                                edge_factor=4)

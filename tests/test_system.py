@@ -85,8 +85,14 @@ def test_moe_active_params_much_smaller():
 
 def test_main_process_sees_one_device():
     """Spec: only the dry-run sets the 512-device flag; tests and benches
-    must see the real single CPU device (multi-device tests subprocess)."""
+    must see the real single CPU device (multi-device tests subprocess).
+    The dedicated multi-device CI leg opts out explicitly by setting
+    REPRO_CI_MULTIDEVICE=1 — there the whole suite deliberately runs
+    under forced host devices to flush devices>1 assumptions."""
     import os
+    if os.environ.get("REPRO_CI_MULTIDEVICE") == "1":
+        import pytest
+        pytest.skip("intentional multi-device CI leg")
     assert "xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", "")
     assert len(jax.devices()) == 1
