@@ -1,29 +1,34 @@
-"""Mesh-sharded Graph500 ladder (DESIGN.md §9): BENCH_bfs.json rungs per
-mesh shape.
+"""Mesh-sharded Graph500 ladder (DESIGN.md §9/§10): BENCH_bfs.json rungs
+per mesh shape, every rung a :class:`repro.core.plan.BFSPlan`.
 
-Two harness layers over 8 forced host devices (the container is XLA:CPU;
-relative rungs, not absolute GTEPS, are the tracked numbers):
+Three harness layers over 8 forced host devices (the container is
+XLA:CPU; relative rungs, not absolute GTEPS, are the tracked numbers):
 
-  * root-parallel  — ``bfs_batch_sharded`` over a ("root",) mesh of
-    1/2/4/8 devices: the 64 search keys split with zero communication.
-    Rung "1" is plain single-device ``bfs_batch`` (the PR-1 baseline).
-    Parents are asserted bitwise-identical to the baseline for every
-    shape before timing.
-  * vertex-sharded — ``run_graph500_sharded`` over (group, member)
+  * root-parallel   — ``BFSPlan(layout=("root",))`` over 1/2/4/8
+    devices: the 64 search keys split with zero communication.  Rung "1"
+    is the plain single-device batch plan (the PR-1 baseline).  Parents
+    are asserted bitwise-identical to the baseline for every shape
+    before timing.
+  * vertex-sharded  — ``BFSPlan(layout=("group", "member"))`` over
     meshes 2x1 / 2x2 / 4x2: one giant traversal spans the mesh, the
     per-level delta bitmaps combine through the T3 two-phase bitwise-OR
-    collective (``exchange=hier_or``).
+    collective (``exchange="hier_or"``).
+  * composed        — ``BFSPlan(layout=("root", "group", "member"))``
+    over the 2x2x2 mesh: the root batch splits over its own mesh axis
+    OUTSIDE the vertex-sharded SPMD program (layer 1 x layer 2).
 
 Because the main benchmark process must keep seeing one device, the
 measurements run in a child process carrying
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the child prints
-a JSON payload the parent folds into ``BENCH_bfs.json``.
+a JSON payload the parent folds into ``BENCH_bfs.json``.  Each rung's
+payload records its plan (``BFSPlan.to_dict()``).
 
 Env knobs: ``BENCH_SHARDED_SCALE`` (default 14 — the acceptance scale),
 ``BENCH_SHARDED_ROOTS`` (default 64), ``BENCH_SHARDED_VERTEX_ROOTS``
 (default 16: the vertex-sharded SPMD batch multiplies every collective
 by the root lane count, so the full 64 is a knob, not the default, on
-the interpret-mode container).
+the interpret-mode container), ``BENCH_RUNGS`` (comma list filtering
+rung names, set by ``benchmarks/run.py --rungs``).
 """
 from __future__ import annotations
 
@@ -33,13 +38,14 @@ import subprocess
 import sys
 import time
 
-from benchmarks.common import row
+from benchmarks.common import row, rung_filter
 
 _MARK = "BFS_SHARDED_JSON:"
 _PAYLOAD: dict = {}
 
 ROOT_SHAPES = (1, 2, 4, 8)
 VERTEX_SHAPES = ((2, 1), (2, 2), (4, 2))
+COMPOSED_SHAPES = ((2, 2, 2),)
 
 
 def json_payload() -> dict:
@@ -49,23 +55,22 @@ def json_payload() -> dict:
 def _child() -> dict:
     import numpy as np
     import jax
-    import jax.numpy as jnp
 
     from repro.core import (
-        build_csr, build_heavy_core, bfs_batch, bfs_batch_sharded,
-        chunk_edge_view, degree_reorder, edge_view, generate_edges,
-        run_graph500_sharded, sample_roots, traversed_edges,
+        BFSPlan, PreparedGraph, build_csr, build_heavy_core, chunk_edge_view,
+        compile_plan, degree_reorder, edge_view, generate_edges, sample_roots,
     )
-    from repro.core.distributed_bfs import shard_graph
-    from repro.core.graph_build import csr_to_edge_arrays
     from repro.core.reorder import relabel_edges
     from repro.kernels import ops as kops
-    from repro.util import make_mesh
 
     scale = int(os.environ.get("BENCH_SHARDED_SCALE", "14"))
     n_roots = int(os.environ.get("BENCH_SHARDED_ROOTS", "64"))
     n_vroots = int(os.environ.get("BENCH_SHARDED_VERTEX_ROOTS", "16"))
     reps = int(os.environ.get("BENCH_SHARDED_REPS", "2"))
+    want = rung_filter()
+
+    def wanted(name: str) -> bool:
+        return want is None or name in want
 
     edges = generate_edges(1, scale)
     g0 = build_csr(edges)
@@ -77,13 +82,8 @@ def _child() -> dict:
     core = build_heavy_core(g, threshold=threshold)
     roots = np.asarray(sample_roots(1, edges, n_roots))
     roots = np.asarray(r.new_from_old)[roots].astype(np.int32)
-
-    def teps_of(res, per_root_s):
-        m = np.asarray(jax.vmap(traversed_edges, in_axes=(None, 0))(
-            g.degree, res))
-        t = m / per_root_s
-        t = t[t > 0]
-        return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
+    pg = PreparedGraph(ev=ev, degree=g.degree, core=core, chunks=chunks)
+    V = g.num_vertices
 
     out: dict = {
         "scale": scale,
@@ -93,30 +93,43 @@ def _child() -> dict:
         "exchange": "hier_or",
         "root_parallel": {},
         "vertex_sharded": {},
+        "composed": {},
         "mesh_ladder": {},
     }
 
-    # ---- root-parallel ladder (layer 1) --------------------------------
-    kw = dict(core=core, chunks=chunks)
-    base_res = bfs_batch(ev, g.degree, roots, **kw)       # warmup + oracle
-    base_parent = np.asarray(base_res.parent)
+    # ---- baseline + root-parallel ladder (layer 1) ---------------------
+    # The single-device oracle batch is expensive (a full 64-root fused
+    # traversal on the interpret-mode container), so it runs lazily: only
+    # when a selected rung needs a parity check or the rel-vs-single
+    # denominator.
+    base_plan = BFSPlan(layout=(), batch_roots=True)
+    base = compile_plan(base_plan, pg)
+    _base_parent: dict = {}
+
+    def base_parent(n):
+        if n not in _base_parent:
+            _base_parent[n] = np.asarray(base.bfs(roots[:n]).parent)
+        return _base_parent[n]
+
     base_per_root = None
     identical = True
-    for n_dev in ROOT_SHAPES:
-        if n_dev == 1:
-            fn = lambda: bfs_batch(ev, g.degree, roots, **kw)
-        else:
-            mesh = make_mesh((n_dev,), ("root",))
-            fn = (lambda mesh=mesh:
-                  bfs_batch_sharded(ev, g.degree, roots, mesh=mesh, **kw))
-        res = fn()                                        # compile + check
+    parity_checks = 0
+
+    def timed_rung(fn, plan, layer, mesh_name, n, check_parent=None):
+        """Compile+parity check, then min-over-reps wall clock."""
+        nonlocal identical, parity_checks
+        res = fn()
         jax.block_until_ready(res.parent)
-        same = bool(np.array_equal(np.asarray(res.parent), base_parent))
-        if not same:
-            raise AssertionError(
-                f"root-parallel mesh={n_dev}: parents diverge from "
-                f"single-device bfs_batch — parity regression")
-        identical &= same
+        if check_parent is not None:
+            p = np.asarray(res.parent)
+            p = p[:, :V] if p.shape[1] > V else p
+            same = bool(np.array_equal(p, check_parent))
+            if not same:
+                raise AssertionError(
+                    f"{layer} mesh={mesh_name}: parents diverge from the "
+                    f"single-device batch — parity regression")
+            identical &= same
+            parity_checks += 1
         # min over reps: the rung ratio is the tracked number and a single
         # 40 s wall sample is at the mercy of background load.
         wall = float("inf")
@@ -125,22 +138,57 @@ def _child() -> dict:
             res = fn()
             jax.block_until_ready(res.parent)
             wall = min(wall, time.perf_counter() - t0)
-        per_root = wall / n_roots
-        if n_dev == 1:
-            base_per_root = per_root
-        rung = {
-            "mesh": f"{n_dev}",
-            "layer": "root_parallel",
+        per_root = wall / n
+        return res, {
+            "mesh": mesh_name,
+            "layer": layer,
+            "plan": plan.to_dict(),
             "wall_us": wall * 1e6,
             "per_root_us": per_root * 1e6,
-            "harmonic_mean_teps": teps_of(res, per_root),
-            "n_roots": n_roots,
-            "rel_per_root_vs_single": per_root / base_per_root,
+            "n_roots": n,
         }
-        out["root_parallel"][str(n_dev)] = rung
-        print(f"# root_parallel mesh={n_dev}: wall={wall:.2f}s "
-              f"rel={rung['rel_per_root_vs_single']:.3f}", file=sys.stderr)
-    out["parents_bitwise_identical"] = identical
+
+    def teps_of(res, per_root_s):
+        import jax.numpy as jnp
+        from repro.core import traversed_edges
+        from repro.core.hybrid_bfs import BFSResult
+
+        p = np.asarray(res.parent)
+        p = p[:, :V] if p.shape[1] > V else p
+        m = np.asarray(jax.vmap(
+            lambda pp: traversed_edges(
+                g.degree, BFSResult(parent=pp, level=None, stats=None))
+        )(jnp.asarray(p)))
+        t = m / per_root_s
+        t = t[t > 0]
+        return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
+
+    for n_dev in ROOT_SHAPES:
+        name = str(n_dev)
+        if not wanted(name):
+            continue
+        if n_dev == 1:
+            plan, compiled = base_plan, base
+        else:
+            plan = BFSPlan(layout=("root",), mesh_shape=(n_dev,))
+            compiled = compile_plan(plan, pg)
+        res, rung = timed_rung(lambda: compiled.bfs(roots), plan,
+                               "root_parallel", name, n_roots,
+                               check_parent=base_parent(n_roots))
+        per_root = rung["per_root_us"] / 1e6
+        if n_dev == 1:
+            base_per_root = per_root
+        rung["harmonic_mean_teps"] = teps_of(res, per_root)
+        # absent (not NaN — invalid strict JSON) when rung "1" is filtered
+        if base_per_root:
+            rung["rel_per_root_vs_single"] = per_root / base_per_root
+        out["root_parallel"][name] = rung
+        print(f"# root_parallel mesh={n_dev}: wall={rung['wall_us']/1e6:.2f}s "
+              f"rel={rung.get('rel_per_root_vs_single', float('nan')):.3f}",
+              file=sys.stderr)
+    # None (not True) when the rung filter skipped every parity check —
+    # "no comparison ran" must not read as "verified identical".
+    out["parents_bitwise_identical"] = identical if parity_checks else None
 
     # ---- vertex-sharded ladder (layer 2) -------------------------------
     # The acceptance shapes are pinned; the topology planner's answer for
@@ -152,21 +200,23 @@ def _child() -> dict:
     if planned not in shapes:
         shapes.append(planned)
     out["planned_shape"] = f"{planned[0]}x{planned[1]}"
-    src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
     vroots = roots[:n_vroots]
     for shape in shapes:
-        p = shape[0] * shape[1]
-        sg = shard_graph(src, dst, valid, g.num_vertices, p)
-        mesh = make_mesh(shape, ("group", "member"))
-        run = run_graph500_sharded(mesh, sg, g.degree, vroots, core=core,
-                                   exchange="hier_or", ev=ev)
+        name = f"{shape[0]}x{shape[1]}"
+        if not wanted(name):
+            continue
+        plan = BFSPlan(layout=("group", "member"), mesh_shape=shape,
+                       exchange="hier_or")
+        compiled = compile_plan(plan, pg)    # shards the graph internally
+        result = compiled.run(vroots)
+        run = result.run
         if not run.all_valid:
             raise AssertionError(
                 f"vertex-sharded mesh={shape}: spec validation failed")
-        name = f"{shape[0]}x{shape[1]}"
         out["vertex_sharded"][name] = {
             "mesh": name,
             "layer": "vertex_sharded",
+            "plan": plan.to_dict(),
             "wall_us": float(np.sum(run.times_s)) * 1e6,
             "per_root_us": float(np.mean(run.times_s)) * 1e6,
             "harmonic_mean_teps": run.harmonic_mean_teps,
@@ -176,12 +226,55 @@ def _child() -> dict:
         print(f"# vertex_sharded mesh={name}: "
               f"wall={float(np.sum(run.times_s)):.2f}s", file=sys.stderr)
 
+    # ---- composed 3-axis ladder (layer 1 x layer 2) --------------------
+    for shape in COMPOSED_SHAPES:
+        name = f"{shape[0]}x{shape[1]}x{shape[2]}"
+        if not wanted(name):
+            continue
+        plan = BFSPlan(layout=("root", "group", "member"), mesh_shape=shape,
+                       exchange="hier_or")
+        compiled = compile_plan(plan, pg)
+        res, rung = timed_rung(
+            lambda: compiled.bfs(vroots), plan, "composed", name,
+            len(vroots), check_parent=base_parent(len(vroots)))
+        rung["harmonic_mean_teps"] = teps_of(res, rung["per_root_us"] / 1e6)
+        out["composed"][name] = rung
+        print(f"# composed mesh={name}: wall={rung['wall_us']/1e6:.2f}s",
+              file=sys.stderr)
+
     # ---- acceptance view: one rung per mesh shape ----------------------
-    out["mesh_ladder"]["1"] = out["root_parallel"]["1"]
-    out["mesh_ladder"]["2"] = out["root_parallel"]["2"]
-    for name, rung in out["vertex_sharded"].items():
-        out["mesh_ladder"][name] = rung
+    for src_key in ("root_parallel", "vertex_sharded", "composed"):
+        for name, rung in out[src_key].items():
+            if src_key == "root_parallel" and name not in ("1", "2"):
+                continue
+            out["mesh_ladder"][name] = rung
     return out
+
+
+def _merge_unselected_rungs(payload: dict, repo: str) -> None:
+    """Under a BENCH_RUNGS filter, fold the previously tracked rungs of the
+    same scale back into the payload — run.py's module-granularity merge
+    would otherwise drop every rung the filter skipped from
+    BENCH_bfs.json's trajectory.  Rungs measured by THIS run are listed
+    in ``rungs_from_this_run``; a different scale replaces wholesale
+    (mixing scales in one ladder would be worse than dropping rungs)."""
+    fresh = sorted(
+        set(payload["root_parallel"]) | set(payload["vertex_sharded"])
+        | set(payload["composed"]))
+    payload["rungs_from_this_run"] = fresh
+    if rung_filter() is None:
+        return
+    try:
+        with open(os.path.join(repo, "BENCH_bfs.json")) as f:
+            prev = json.load(f)["modules"]["bfs_sharded"]
+    except (OSError, ValueError, KeyError):
+        return
+    if prev.get("scale") != payload["scale"]:
+        return
+    for key in ("root_parallel", "vertex_sharded", "composed", "mesh_ladder"):
+        merged = dict(prev.get(key, {}))
+        merged.update(payload.get(key, {}))
+        payload[key] = merged
 
 
 def run():
@@ -204,6 +297,7 @@ def run():
     if payload is None:
         raise RuntimeError(f"no payload marker in child stdout:\n"
                            f"{proc.stdout[-2000:]}")
+    _merge_unselected_rungs(payload, repo)
     _PAYLOAD.update(payload)
 
     rows = []
@@ -218,7 +312,8 @@ def run():
         rows.append(row(
             f"bfs_sharded/scale{payload['scale']}/root_parallel{n_dev}",
             rung["per_root_us"],
-            f"rel_vs_single={rung['rel_per_root_vs_single']:.3f};"
+            f"rel_vs_single="
+            f"{rung.get('rel_per_root_vs_single', float('nan')):.3f};"
             f"identical={payload['parents_bitwise_identical']}"))
     return rows
 

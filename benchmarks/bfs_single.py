@@ -37,13 +37,13 @@ import jax.numpy as jnp
 
 from benchmarks.common import FAST, row, timed
 from repro.core import (
-    build_csr, build_heavy_core, chunk_edge_view, degree_reorder,
-    edge_view, generate_edges, hybrid_bfs, sample_roots, traversed_edges,
+    BFSPlan, PreparedGraph, build_csr, build_heavy_core, chunk_edge_view,
+    compile_plan, degree_reorder, edge_view, generate_edges, sample_roots,
+    traversed_edges,
 )
 from repro.core.heavy import pack_bitmap
 from repro.core.reference import reference_bfs
 from repro.core.reorder import relabel_edges
-from repro.core.teps import run_graph500_batched
 from repro.kernels.frontier_spmv import core_spmv
 
 _PAYLOAD: dict = {}
@@ -73,7 +73,17 @@ def run():
         core = build_heavy_core(g, threshold=threshold)
         ro, ci = np.asarray(g.row_offsets), np.asarray(g.col_indices)
         root = 0
-        res = hybrid_bfs(ev, g.degree, root)
+        pg = PreparedGraph(ev=ev, degree=g.degree, core=core, chunks=chunks)
+        pg_nocore = PreparedGraph(ev=ev, degree=g.degree, chunks=chunks)
+        plan_xla = compile_plan(
+            BFSPlan(engine="reference", batch_roots=False), pg)
+        plan_leg = compile_plan(
+            BFSPlan(engine="legacy", batch_roots=False), pg)
+        plan_bm = compile_plan(
+            BFSPlan(engine="bitmap", batch_roots=False), pg)
+        plan_nocore = compile_plan(
+            BFSPlan(engine="bitmap", batch_roots=False), pg_nocore)
+        res = plan_xla.bfs(root)
         m = int(traversed_edges(g.degree, res))
         engines: dict[str, dict] = {}
 
@@ -86,7 +96,7 @@ def run():
         reference_bfs(ro, ci, root)
         record("reference-3.0.0", time.perf_counter() - t0)
 
-        record("xla", timed(lambda: hybrid_bfs(ev, g.degree, root).parent))
+        record("xla", timed(lambda: plan_xla.bfs(root).parent))
 
         for mode, rpt in (("avla", 8), ("avls", 32)):
             # kernel-tile mode enters through rows_per_tile; run the dense
@@ -102,10 +112,8 @@ def run():
 
         # Before/after pair measured *interleaved* so background load drift
         # hits both engines equally — their ratio is the tracked number.
-        fn_leg = lambda: hybrid_bfs(ev, g.degree, root, core=core,
-                                    engine="legacy").parent
-        fn_bm = lambda: hybrid_bfs(ev, g.degree, root, core=core,
-                                   engine="bitmap", chunks=chunks).parent
+        fn_leg = lambda: plan_leg.bfs(root).parent
+        fn_bm = lambda: plan_bm.bfs(root).parent
         jax.block_until_ready(fn_leg())
         jax.block_until_ready(fn_bm())
         t_legs, t_bms = [], []
@@ -119,9 +127,7 @@ def run():
         note = ";note=interpret-mode Pallas (CPU) — see DESIGN.md §8"
         record("legacy_engine", float(np.median(t_legs)), note)
         record("bitmap_engine", float(np.median(t_bms)), note)
-        record("bitmap_nocore",
-               timed(lambda: hybrid_bfs(ev, g.degree, root, engine="bitmap",
-                                        chunks=chunks).parent))
+        record("bitmap_nocore", timed(lambda: plan_nocore.bfs(root).parent))
 
         # --- Graph500-spec batched harness: 64 keys, one jitted program ---
         # Timed once inside run_graph500_batched (the fused program is too
@@ -136,8 +142,8 @@ def run():
         if scale <= batch_scale_max:
             roots = np.asarray(sample_roots(1, edges, 64))
             roots = np.asarray(r.new_from_old)[roots]
-            g500 = run_graph500_batched(ev, g.degree, roots, core=core,
-                                        do_validate=False, warmup=True)
+            g500 = compile_plan(BFSPlan(layout=(), batch_roots=True), pg).run(
+                roots, warmup=True, do_validate=False).run
             t_b = float(np.sum(g500.times_s))
             rows.append(row(
                 f"bfs_single/scale{scale}/batch64", t_b * 1e6 / len(roots),
@@ -147,6 +153,7 @@ def run():
                 "n_roots": int(len(roots)),
                 "batch_us": t_b * 1e6,
                 "harmonic_mean_teps": g500.harmonic_mean_teps,
+                "plan": BFSPlan(layout=(), batch_roots=True).to_dict(),
             }
         else:
             rows.append(row(
@@ -155,8 +162,7 @@ def run():
                 "-on-interpret-backend"))
 
         # --- per-level breakdown + before/after for BENCH_bfs.json -------
-        res_bm = hybrid_bfs(ev, g.degree, root, core=core, engine="bitmap",
-                            chunks=chunks)
+        res_bm = plan_bm.bfs(root)
         lv = int(res_bm.stats.levels)
         speedup = (engines["legacy_engine"]["us_per_call"]
                    / engines["bitmap_engine"]["us_per_call"])
@@ -168,6 +174,8 @@ def run():
         _PAYLOAD[f"scale{scale}"] = {
             "scale": scale,
             "engine": "bitmap",
+            "plan": BFSPlan(engine="bitmap", layout=(),
+                            batch_roots=False).to_dict(),
             "heavy_threshold": threshold,
             "traversed_edges": m,
             "engines": engines,

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from benchmarks.common import FAST, row, timed
 from repro.comms.topology import TreeTopology, elect_monitors, simulate_messages
 from repro.core import (
-    build_csr, build_heavy_core, chunk_edge_view, degree_reorder, edge_view,
-    generate_edges, hybrid_bfs,
+    BFSPlan, PreparedGraph, build_csr, build_heavy_core, chunk_edge_view,
+    compile_plan, degree_reorder, edge_view, generate_edges,
 )
 from repro.core.heavy import pack_bitmap
 from repro.core.reorder import relabel_edges
@@ -41,9 +41,11 @@ def run():
     # measured compute phases
     f_bm = pack_bitmap(jnp.zeros((core.k,), bool).at[0].set(True), core.k // 32)
     t_core = timed(lambda: kops.core_spmv(core.a_core, f_bm))
-    t_total = timed(lambda: hybrid_bfs(ev, g.degree, 0, core=core,
-                                       engine="bitmap", chunks=chunks).parent)
-    res = hybrid_bfs(ev, g.degree, 0, core=core, engine="bitmap", chunks=chunks)
+    bm = compile_plan(BFSPlan(engine="bitmap", batch_roots=False),
+                      PreparedGraph(ev=ev, degree=g.degree, core=core,
+                                    chunks=chunks))
+    t_total = timed(lambda: bm.bfs(0).parent)
+    res = bm.bfs(0)
     levels = int(res.stats.levels)
 
     # modeled communication per policy

@@ -23,6 +23,18 @@ def timed(fn, *args, repeats: int = 3, warmup: int = 1):
     return float(np.median(ts))
 
 
+def rung_filter() -> set[str] | None:
+    """Parse BENCH_RUNGS (set by ``benchmarks/run.py --rungs``).
+
+    Returns the selected rung names, or None for "run everything" — the
+    one copy shared by every rung-aware module.
+    """
+    env = os.environ.get("BENCH_RUNGS", "").strip()
+    if not env:
+        return None
+    return {r.strip() for r in env.split(",") if r.strip()}
+
+
 def row(name: str, us_per_call: float, derived: str) -> dict:
     return {"name": name, "us_per_call": us_per_call, "derived": derived}
 

@@ -12,8 +12,8 @@ import numpy as np
 
 from benchmarks.common import FAST, row, timed
 from repro.core import (
-    build_csr, build_heavy_core, chunk_edge_view, degree_reorder, edge_view,
-    generate_edges, hybrid_bfs, traversed_edges,
+    BFSPlan, PreparedGraph, build_csr, build_heavy_core, chunk_edge_view,
+    compile_plan, degree_reorder, edge_view, generate_edges, traversed_edges,
 )
 from repro.core.reorder import relabel_edges
 
@@ -30,22 +30,26 @@ def run():
     g = build_csr(relabel_edges(edges, r))
     ev = edge_view(g)
     chunks = chunk_edge_view(ev)  # construction, untimed (spec)
-    res = hybrid_bfs(ev, g.degree, 0)
+    ref = compile_plan(BFSPlan(engine="reference", batch_roots=False),
+                       PreparedGraph(ev=ev, degree=g.degree))
+    res = ref.bfs(0)
     m = int(traversed_edges(g.degree, res))
     deg = np.asarray(g.degree)
 
-    t_none = timed(lambda: hybrid_bfs(ev, g.degree, 0).parent)
+    t_none = timed(lambda: ref.bfs(0).parent)
     rows.append(row("heavy_buffer/none", t_none * 1e6,
                     f"GTEPS={m / t_none / 1e9:.5f}"))
 
     thresholds = (4, 16, 64) if FAST else (4, 16, 50, 64, 100)
+    plan_bm = BFSPlan(engine="bitmap", batch_roots=False)
     for d_thr in thresholds:
         core = build_heavy_core(g, threshold=d_thr)
         frac_v = float((deg >= d_thr).mean())
         core_edges = int(core.core_nnz)
         frac_e = core_edges / max(int(g.nnz), 1)
-        t = timed(lambda core=core: hybrid_bfs(
-            ev, g.degree, 0, core=core, engine="bitmap", chunks=chunks).parent)
+        bm = compile_plan(plan_bm, PreparedGraph(
+            ev=ev, degree=g.degree, core=core, chunks=chunks))
+        t = timed(lambda bm=bm: bm.bfs(0).parent)
         rows.append(row(
             f"heavy_buffer/D>={d_thr}", t * 1e6,
             f"GTEPS={m / t / 1e9:.5f};heavy_vert={frac_v:.2%};"

@@ -5,15 +5,24 @@ Usage::
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run degree_census monitor_policies
     BENCH_FAST=0 PYTHONPATH=src python -m benchmarks.run   # full scales
+    PYTHONPATH=src python -m benchmarks.run bfs_sharded --rungs 1,2x2x2
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 
+``--rungs`` (comma list, exported to modules as ``BENCH_RUNGS``) filters
+the ladder/mesh rungs inside rung-aware modules (``version_ladder``,
+``bfs_sharded``) so CI smoke can run a single rung without executing the
+full set.
+
 Modules may additionally expose ``json_payload() -> dict``; the collected
 payloads are written to ``BENCH_bfs.json`` at the repo root (plus run
-metadata) so the perf trajectory is tracked in-tree from PR to PR.
+metadata) so the perf trajectory is tracked in-tree from PR to PR.  Rung
+entries record the :class:`repro.core.plan.BFSPlan` that produced them
+(as a dict) so every number names the engine configuration it measured.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import platform
@@ -58,6 +67,7 @@ def _write_json(payloads: dict) -> None:
         "python": platform.python_version(),
         "bench_fast": os.environ.get("BENCH_FAST", "1") != "0",
         "bench_scales": os.environ.get("BENCH_SCALES", ""),
+        "bench_rungs": os.environ.get("BENCH_RUNGS", ""),
         # The top-level metadata describes THIS run; merged-in modules
         # not listed here keep numbers from whatever run produced them.
         "modules_from_this_run": sorted(payloads),
@@ -82,7 +92,16 @@ def _write_json(payloads: dict) -> None:
 
 
 def main() -> None:
-    want = sys.argv[1:] or MODULES
+    ap = argparse.ArgumentParser(description="benchmark harness")
+    ap.add_argument("modules", nargs="*",
+                    help=f"modules to run (default: all of {MODULES})")
+    ap.add_argument("--rungs", default=None,
+                    help="comma list of rung names; rung-aware modules "
+                         "run only these (exported as BENCH_RUNGS)")
+    args = ap.parse_args()
+    if args.rungs:
+        os.environ["BENCH_RUNGS"] = args.rungs
+    want = args.modules or MODULES
     print("name,us_per_call,derived")
     failures = []
     payloads = {}

@@ -13,8 +13,8 @@ import numpy as np
 
 from benchmarks.common import FAST, row, timed
 from repro.core import (
-    build_csr, degree_reorder, edge_view, generate_edges, hybrid_bfs,
-    traversed_edges,
+    BFSPlan, PreparedGraph, build_csr, compile_plan, degree_reorder,
+    edge_view, generate_edges, traversed_edges,
 )
 from repro.core.reorder import relabel_edges, sort_host
 from repro.core.kronecker import EdgeList
@@ -42,9 +42,14 @@ def run():
                         f"keys_per_s={n / max(dt, 1e-9):.3g}"))
 
     # --- Fig. 12/13: BFS TEPS with and without the reordering -------------
+    plan_ref = BFSPlan(engine="reference", batch_roots=False)
+
+    def ref_bfs(ev, degree):
+        return compile_plan(plan_ref, PreparedGraph(ev=ev, degree=degree))
+
     variants = {}
     ev0 = edge_view(g0)
-    res0 = hybrid_bfs(ev0, g0.degree, 0)
+    res0 = ref_bfs(ev0, g0.degree).bfs(0)
     m = int(traversed_edges(g0.degree, res0))
     variants["without_sorting"] = (ev0, g0.degree)
 
@@ -62,7 +67,8 @@ def run():
 
     teps = {}
     for name, (ev, degree) in variants.items():
-        t = timed(lambda ev=ev, degree=degree: hybrid_bfs(ev, degree, 0).parent)
+        compiled = ref_bfs(ev, degree)
+        t = timed(lambda c=compiled: c.bfs(0).parent)
         teps[name] = m / t
         rows.append(row(f"sorting_teps/{name}", t * 1e6,
                         f"GTEPS={m / t / 1e9:.5f}"))

@@ -1,10 +1,14 @@
-"""Distributed BFS with monitor communication on 8 host devices.
+"""Mesh-sharded BFS through the plan API on 8 host devices.
 
     PYTHONPATH=src python examples/distributed_bfs.py
 
-Demonstrates T3: the frontier exchange runs as the two-phase hierarchical
-(monitor) all-gather over a (group, member) mesh, and matches the
-sequential oracle exactly.
+Demonstrates the spec→plan→runner lifecycle (DESIGN.md §10): one
+scale-12 graph, three vertex-sharded exchange wirings (T3 monitor
+collectives over a (group, member) mesh), and the composed
+("root", "group", "member") 2x2x2 plan — the 8 search keys split over
+the root axis OUTSIDE the vertex-sharded SPMD program.  Every layout's
+parents are asserted bitwise-identical to the single-device bitmap
+engine, so this script is also the CI composed-mesh smoke.
 """
 import os
 
@@ -12,33 +16,52 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import build_csr, degree_reorder, generate_edges
-from repro.core.distributed_bfs import gather_result, make_dist_bfs, shard_graph
-from repro.core.graph_build import csr_to_edge_arrays
+from repro.core import (
+    BFSPlan, PreparedGraph, build_csr, build_heavy_core, compile_plan,
+    degree_reorder, edge_view, generate_edges,
+)
 from repro.core.reference import reference_bfs
 from repro.core.reorder import relabel_edges
-from repro.util import make_mesh
 
-mesh = make_mesh((2, 4), ("group", "member"))
-print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+print(f"devices: {len(jax.devices())}")
 
 edges = generate_edges(5, 12)
 g0 = build_csr(edges)
 r = degree_reorder(g0.degree)          # T2a: heavy vertices get low ids
 g = build_csr(relabel_edges(edges, r))
-src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
-sg = shard_graph(src, dst, valid, g.num_vertices, 8)  # block word owners
-print(f"graph: {g.num_vertices} vertices, {int(g.nnz)} directed edges, "
-      f"{sg.n_chunks}x{sg.chunk_size} edge chunks/device")
+core = build_heavy_core(g, threshold=32)
+ev = edge_view(g)
+pg = PreparedGraph(ev=ev, degree=g.degree, core=core)
+V = g.num_vertices
+roots = np.arange(8, dtype=np.int32)
+print(f"graph: {V} vertices, {int(g.nnz)} directed edges")
 
+# single-device oracle: the bitmap-resident engine, all roots one program
+base = compile_plan(BFSPlan(layout=(), batch_roots=True), pg)
+base_res = base.bfs(roots)
+base_parent = np.asarray(base_res.parent)
+_, l_ref = reference_bfs(np.asarray(g.row_offsets),
+                         np.asarray(g.col_indices), 0)
+assert np.array_equal(np.asarray(base_res.level)[0], l_ref)
+
+# layer 2: vertex-sharded (2, 4) mesh, all three exchange wirings
 for exchange in ("hier_or", "hier_gather", "flat"):
-    bfs = make_dist_bfs(mesh, sg, exchange=exchange)
-    res = bfs(jnp.int32(0))
-    parent, level = gather_result(res, sg)
-    _, l_ref = reference_bfs(np.asarray(g.row_offsets),
-                             np.asarray(g.col_indices), 0)
-    ok = np.array_equal(level[:g.num_vertices], l_ref)
-    print(f"exchange={exchange:12s}: levels={int(res.levels_run)} "
-          f"match_oracle={ok}")
+    plan = BFSPlan(layout=("group", "member"), mesh_shape=(2, 4),
+                   exchange=exchange)
+    res = compile_plan(plan, pg).bfs(roots)
+    ok = np.array_equal(np.asarray(res.parent)[:, :V], base_parent)
+    print(f"vertex-sharded 2x4 exchange={exchange:12s}: "
+          f"bitwise_identical={ok}")
+    assert ok, exchange
+
+# layer 1 x layer 2 composed: 2x2x2 — roots split over their own axis
+plan = BFSPlan(layout=("root", "group", "member"), mesh_shape=(2, 2, 2))
+compiled = compile_plan(plan, pg)
+result = compiled.run(roots)
+ok = np.array_equal(result.parent, base_parent)
+print(f"composed 2x2x2 plan: bitwise_identical={ok} "
+      f"valid={result.run.all_valid} mesh={compiled.mesh_axes} "
+      f"hmean_TEPS={result.run.harmonic_mean_teps:.3g}")
+assert ok and result.run.all_valid
+print("OK")

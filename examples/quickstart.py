@@ -4,7 +4,7 @@
 """
 import jax.numpy as jnp
 
-from repro.core import Graph500Config, run, validate, hybrid_bfs
+from repro.core import BFSPlan, Graph500Config, compile_plan, run, validate
 
 # 1. Reference configuration (no customizations) ---------------------------
 base = Graph500Config.ladder("reference-3.0.0", scale=10, n_roots=4)
@@ -24,9 +24,9 @@ print(f"pre-g500        : {res_p.harmonic_mean_teps / 1e9:.5f} GTEPS "
 print(f"heavy core      : K={built_p.core.k} vertices, "
       f"{int(built_p.core.core_nnz)} edges in the dense corner")
 
-# 3. Inspect one BFS run ----------------------------------------------------
-res = hybrid_bfs(built_p.ev, built_p.degree, 0, core=built_p.core,
-                 engine="bitmap")
+# 3. Inspect one BFS run (the spec→plan→runner API, DESIGN.md §10) ---------
+plan = BFSPlan(engine="bitmap", layout=(), batch_roots=False)
+res = compile_plan(plan, built_p).bfs(0)
 lv = int(res.stats.levels)
 print(f"BFS from root 0 : {lv} levels, directions "
       f"{[int(d) for d in res.stats.direction[:lv]]} (0=top-down 1=bottom-up)")

@@ -18,6 +18,9 @@ from repro.core.validate import validate
 from repro.core.teps import (
     run_graph500, run_graph500_batched, run_graph500_sharded, traversed_edges,
 )
+from repro.core.plan import (
+    BFSPlan, CompiledBFS, Graph500Result, PreparedGraph, compile_plan,
+)
 from repro.core.pipeline import Graph500Config, build, run
 
 __all__ = [
@@ -30,5 +33,7 @@ __all__ = [
     "BFSResult", "bfs_batch", "bfs_batch_sharded", "hybrid_bfs",
     "validate", "run_graph500", "run_graph500_batched",
     "run_graph500_sharded", "traversed_edges",
+    "BFSPlan", "CompiledBFS", "Graph500Result", "PreparedGraph",
+    "compile_plan",
     "Graph500Config", "build", "run",
 ]

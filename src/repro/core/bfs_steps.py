@@ -86,43 +86,6 @@ def masked_relax_step(
     return new_parent, next_frontier
 
 
-def relax_bitmap_local(
-    src_ids: jax.Array,      # [E_loc] source ids in *bitmap index space*
-    dst_local: jax.Array,    # [E_loc] local slot of the owned destination
-    valid: jax.Array,        # [E_loc] bool
-    frontier_bm: jax.Array,  # [W] uint32 — frontier bitmap (same id space)
-    parent_loc: jax.Array,   # [V_loc] int32, sentinel = ``sentinel``
-    sentinel: int | jax.Array,
-) -> tuple[jax.Array, jax.Array]:
-    """One owner-local relax pass against a frontier bitmap.
-
-    The distributed-BFS level kernel of the *cyclic-layout* cost model:
-    frontier membership is a bit gather from ``frontier_bm`` at
-    ``src_ids`` (owner-major ids), destinations are local slots of this
-    shard, unvisited is tested via the parent sentinel, and the
-    scatter-min lands in the local parent block.  Returns
-    ``(new_parent, newly)``.  Used by the ``launch/input_specs`` dry-run
-    cost cells — formerly duplicated there and as the deleted
-    ``distributed_bfs._local_level``.  (The resident vertex-sharded
-    engine's relax, ``hybrid_bfs._relax_owned_edges``, differs on
-    purpose: it tests unvisited against the resident visited *bitmap*,
-    per invariant I1.)
-    """
-    word = frontier_bm[jnp.clip(src_ids // 32, 0, frontier_bm.shape[0] - 1)]
-    in_frontier = ((word >> (src_ids % 32).astype(jnp.uint32))
-                   & jnp.uint32(1)).astype(bool)
-    unvisited = parent_loc == sentinel
-    v_loc = parent_loc.shape[0]
-    active = valid & in_frontier & unvisited[jnp.clip(dst_local, 0, v_loc - 1)]
-    cand = jnp.where(active, src_ids, sentinel).astype(jnp.int32)
-    tgt = jnp.where(active, dst_local, v_loc)
-    ext = jnp.concatenate(
-        [parent_loc, jnp.full((1,), sentinel, jnp.int32)])
-    new_parent = ext.at[tgt].min(cand)[:-1]
-    newly = (new_parent != sentinel) & unvisited
-    return new_parent, newly
-
-
 def frontier_edge_count(degree: jax.Array, frontier: jax.Array) -> jax.Array:
     """Edges incident to the frontier — the m_f quantity in the direction switch."""
     return jnp.sum(jnp.where(frontier, degree, 0))

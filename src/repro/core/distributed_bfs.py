@@ -27,31 +27,27 @@ src-sorted + chunked per shard so small frontiers skip most of the scan.
 Exercised three ways:
   * tests/test_distributed.py + tests/test_sharded.py run it on host
     device meshes (subprocess);
-  * benchmarks/bfs_sharded.py ladders it over mesh shapes.
+  * benchmarks/bfs_sharded.py ladders it over mesh shapes;
+  * launch/dryrun.py's graph500 rows lower the same engine shape-only on
+    the 256/512-chip production meshes (core/plan.py's
+    ``vertex_sharded_program`` is the shared shard_map wiring).
 
-(launch/dryrun.py's graph500 rows still lower the *retired* cyclic
-pack-per-level structure via the self-contained cost-model copies in
-launch/input_specs.py — a stale model of this engine; porting the
-dry-run cells to the resident layout is an open ROADMAP item.)
+``make_dist_bfs`` is a deprecation shim over the plan API
+(``BFSPlan(layout=("group", "member"))`` — DESIGN.md §10); this module
+keeps the host-side partitioner (``shard_graph``) and result helpers.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.bfs_steps import DEFAULT_CHUNKS
 from repro.core.heavy import HeavyCore, padded_bitmap_words
-from repro.core.hybrid_bfs import (
-    MAX_LEVELS,
-    SHARD_EXCHANGES,
-    _run_bitmap_sharded,
-)
-from repro.kernels import ops as kops
-from repro.util import pytree_dataclass, shard_map
+from repro.core.hybrid_bfs import MAX_LEVELS
+from repro.util import pytree_dataclass
 
 
 @pytree_dataclass(meta=("num_vertices", "v_orig", "n_devices", "n_chunks",
@@ -148,64 +144,39 @@ def make_dist_bfs(
     max_levels: int = MAX_LEVELS,
     batched: bool = False,
 ):
-    """Build the jitted vertex-sharded BFS for a pre-sharded graph.
+    """DEPRECATED: vertex-sharded BFS driver — shim over the plan API.
 
-    Returns ``fn(root) -> DistBFSResult`` (or ``fn(roots[R])`` with a
-    leading roots axis when ``batched=True`` — all search keys in one
-    SPMD program, the mesh analogue of ``bfs_batch``).
+    Equivalent plan: ``BFSPlan(layout=("group", "member"),
+    exchange=exchange, batch_roots=batched)`` compiled against ``mesh``
+    with ``built.sharded = g`` (the shard_map wiring now lives in
+    ``core/plan.py:vertex_sharded_program`` — the one copy shared with
+    the dry-run cost cells).  Returns ``fn(root) -> DistBFSResult`` (or
+    ``fn(roots[R])`` with a leading roots axis when ``batched=True``),
+    bitwise-identical to the plan run.
 
     ``exchange`` selects the delta-combination wiring
     (``hier_or`` | ``hier_gather`` | ``flat``); when None it follows the
     ``hierarchical`` flag (kept for the ablation benchmark and API
     compatibility with the retired engine).
     """
+    from repro.core import plan as plan_api
+
+    plan_api.warn_deprecated(
+        "make_dist_bfs",
+        'BFSPlan(layout=("group", "member"), exchange=..., '
+        'batch_roots=...)')
     if exchange is None:
         exchange = "hier_or" if hierarchical else "flat"
-    if exchange not in SHARD_EXCHANGES:
-        raise ValueError(
-            f"unknown exchange {exchange!r}; expected one of {SHARD_EXCHANGES}")
-    axes = (group_axis, member_axis)
-    n_dev = g.n_devices
-    assert n_dev == mesh.shape[group_axis] * mesh.shape[member_axis], (
-        n_dev, dict(mesh.shape))
-    use_core = core is not None
+    p = plan_api.BFSPlan(engine="bitmap", layout=("group", "member"),
+                         exchange=exchange, alpha=alpha, beta=beta,
+                         max_levels=max_levels, batch_roots=batched)
+    compiled = plan_api.compile_plan(
+        p, plan_api.PreparedGraph(core=core, sharded=g),
+        mesh=mesh, axis_names=(group_axis, member_axis))
 
-    run_one = functools.partial(
-        _run_bitmap_sharded,
-        alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
-        use_pallas_core=not kops.interpret_mode(),
-        w_loc=g.w_loc, n_dev=n_dev,
-        group_axis=group_axis, member_axis=member_axis, exchange=exchange,
-    )
-
-    def local(root, src, dst_local, valid, src_lo, src_hi, degree_local,
-              n_active, core):
-        args = (src[0], dst_local[0], valid[0], src_lo[0], src_hi[0],
-                degree_local[0])
-        if batched:
-            res = jax.vmap(lambda r: run_one(*args, n_active, r, core))(root)
-        else:
-            res = run_one(*args, n_active, root, core)
-        return res.parent, res.level, res.stats.levels
-
-    fn = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P(axes), P(axes),
-                  P(), P()),
-        out_specs=(P(axes) if not batched else P(None, axes),
-                   P(axes) if not batched else P(None, axes),
-                   P()),
-        check=False,
-    )
-
-    @jax.jit
     def run(root: jax.Array) -> DistBFSResult:
-        root = jnp.asarray(root, jnp.int32)
-        parent, level, lvls = fn(
-            root, g.src, g.dst_local, g.valid, g.src_lo, g.src_hi,
-            g.degree_local, g.n_active, core if use_core else None)
-        return DistBFSResult(parent, level, jnp.max(lvls))
+        res = compiled.bfs(root)
+        return DistBFSResult(res.parent, res.level, jnp.max(res.levels))
 
     return run
 

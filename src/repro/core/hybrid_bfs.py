@@ -45,7 +45,6 @@ from repro.core.bfs_steps import (
     DEFAULT_CHUNKS,
     ChunkedEdgeView,
     EdgeView,
-    chunk_edge_view,
     chunk_frontier_mask,
     chunk_range_mask,
     frontier_edge_count,
@@ -499,30 +498,24 @@ def hybrid_bfs(
     chunks: ChunkedEdgeView | None = None,
     n_chunks: int = DEFAULT_CHUNKS,
 ) -> BFSResult:
-    """Run one hybrid BFS from ``root``.
+    """DEPRECATED: one hybrid BFS from ``root`` — shim over the plan API.
 
-    ``engine in {reference, legacy, bitmap}`` — see the module docstring.
-    ``chunks`` lets callers reuse a precomputed :func:`chunk_edge_view`
-    (the bitmap engine builds one per call otherwise).
+    Equivalent plan: ``BFSPlan(engine=engine, layout=(),
+    batch_roots=False)``; results are bitwise-identical (the shim routes
+    through :func:`repro.core.plan.compile_plan`, which runs the same
+    jitted engine).  See DESIGN.md §10 for the migration table.
     """
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
-    n_active = jnp.sum(degree > 0).astype(jnp.int32)
-    root = jnp.asarray(root, jnp.int32)
-    if engine == "bitmap":
-        if chunks is None:
-            chunks = chunk_edge_view(ev, n_chunks)
-        use_core = core is not None
-        return _run_bitmap(
-            chunks, degree, n_active, root, core if use_core else None,
-            alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
-        )
-    use_core = engine == "legacy" and core is not None
-    return _run_legacy(
-        ev, degree, n_active, root, core if use_core else None,
-        engine=engine, alpha=alpha, beta=beta,
-        use_core=use_core, max_levels=max_levels,
-    )
+    from repro.core import plan as plan_api
+
+    plan_api.warn_deprecated(
+        "hybrid_bfs", "BFSPlan(engine=..., layout=(), batch_roots=False)")
+    p = plan_api.BFSPlan(engine=engine, layout=(), batch_roots=False,
+                         alpha=alpha, beta=beta, max_levels=max_levels,
+                         n_chunks=n_chunks)
+    compiled = plan_api.compile_plan(
+        p, plan_api.PreparedGraph(ev=ev, degree=degree, core=core,
+                                  chunks=chunks))
+    return compiled.bfs(root)
 
 
 def bfs_batch(
@@ -537,76 +530,34 @@ def bfs_batch(
     chunks: ChunkedEdgeView | None = None,
     n_chunks: int = DEFAULT_CHUNKS,
 ) -> BFSResult:
-    """Batched bitmap-engine BFS: one jitted program for all ``roots``.
+    """DEPRECATED: batched bitmap-engine BFS — shim over the plan API.
 
-    Returns a :class:`BFSResult` whose leaves carry a leading roots axis.
-    This is the Graph500 64-search-key harness: the whole benchmark loop
-    compiles once and the hardware sees a single fused program.  (Under
-    vmap ``lax.cond`` lowers to ``select`` so per-root chunk skipping
-    becomes masking — expected: different roots have different live
-    chunks.  Per-root wall-clock comes from the batch timer in
-    ``core/teps.py``.)
-
-    On interpret-mode backends (XLA:CPU container) the dense-core step
-    uses the parity-tested jnp oracle instead of the vmapped interpreted
-    Pallas kernel, whose batched grid is pure overhead (DESIGN.md §8); on
-    a real TPU backend the kernel path is used.
+    Equivalent plan: ``BFSPlan(layout=(), batch_roots=True)`` (one jitted
+    program for all roots; under vmap ``lax.cond`` lowers to ``select``
+    so per-root chunk skipping becomes masking — see DESIGN.md §8).
+    Returns a :class:`BFSResult` whose leaves carry a leading roots axis,
+    bitwise-identical to the plan run.
     """
-    if chunks is None:
-        chunks = chunk_edge_view(ev, n_chunks)
-    n_active = jnp.sum(degree > 0).astype(jnp.int32)
-    roots = jnp.asarray(roots, jnp.int32)
-    use_core = core is not None
-    return _run_batch(
-        chunks, degree, n_active, roots, core if use_core else None,
-        alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
-        use_pallas_core=not kops.interpret_mode(),
-    )
+    from repro.core import plan as plan_api
+
+    plan_api.warn_deprecated(
+        "bfs_batch", "BFSPlan(layout=(), batch_roots=True)")
+    p = plan_api.BFSPlan(engine="bitmap", layout=(), batch_roots=True,
+                         alpha=alpha, beta=beta, max_levels=max_levels,
+                         n_chunks=n_chunks)
+    compiled = plan_api.compile_plan(
+        p, plan_api.PreparedGraph(ev=ev, degree=degree, core=core,
+                                  chunks=chunks))
+    return compiled.bfs(roots)
 
 
 # ---------------------------------------------------------------------------
 # Layer 1 — root-parallel mesh sharding (DESIGN.md §9).
 #
-# The 64 Graph500 search keys are embarrassingly parallel: shard_map the
-# batched bitmap engine over a ("root",) device mesh and each device runs
-# its slice of the roots with ZERO communication.  The graph (chunked edge
-# view, degree, heavy core) is replicated; only the root vector is split.
+# The shard_map wiring lives in core/plan.py (`_root_parallel_fn`) — the
+# plan compiler owns the one copy of every mesh program.  The entry point
+# below is the legacy shim.
 # ---------------------------------------------------------------------------
-
-_SHARDED_BATCH_CACHE: dict = {}
-
-
-def _sharded_batch_fn(mesh, root_axis, alpha, beta, use_core, max_levels,
-                      use_pallas_core):
-    """Build (and cache) the jitted shard_map'd batch program for a mesh."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro.util import shard_map
-
-    key = (mesh, root_axis, alpha, beta, use_core, max_levels,
-           use_pallas_core)
-    fn = _SHARDED_BATCH_CACHE.get(key)
-    if fn is not None:
-        return fn
-
-    def local(chunks, degree, n_active, roots, core):
-        return jax.vmap(
-            lambda r: _run_bitmap_impl(
-                chunks, degree, n_active, r, core,
-                alpha=alpha, beta=beta, use_core=use_core,
-                max_levels=max_levels, use_pallas_core=use_pallas_core)
-        )(roots)
-
-    fn = jax.jit(shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(), P(), P(), P(root_axis), P()),
-        out_specs=P(root_axis),
-        check=False,
-    ))
-    _SHARDED_BATCH_CACHE[key] = fn
-    return fn
-
 
 def bfs_batch_sharded(
     ev: EdgeView,
@@ -622,31 +573,27 @@ def bfs_batch_sharded(
     chunks: ChunkedEdgeView | None = None,
     n_chunks: int = DEFAULT_CHUNKS,
 ) -> BFSResult:
-    """Root-parallel :func:`bfs_batch` over a device mesh (layer 1 sharding).
+    """DEPRECATED: root-parallel batch — shim over the plan API.
 
-    Splits ``roots`` across ``mesh``'s ``root_axis`` with the graph
-    replicated — per-root outputs are bitwise-identical to the
-    single-device batch (each root's traversal is an independent program;
-    no collective appears anywhere in the lowering).  ``roots`` is padded
-    with ``roots[0]`` up to a multiple of the axis size and the padding is
-    sliced off the result.
+    Equivalent plan: ``BFSPlan(layout=("root",))`` compiled against
+    ``mesh``.  Splits ``roots`` across ``mesh``'s ``root_axis`` with the
+    graph replicated — per-root outputs are bitwise-identical to the
+    single-device batch (no collective appears anywhere in the lowering);
+    ``roots`` is padded with ``roots[0]`` up to a multiple of the axis
+    size and the padding is sliced off the result.
     """
-    if chunks is None:
-        chunks = chunk_edge_view(ev, n_chunks)
-    n_active = jnp.sum(degree > 0).astype(jnp.int32)
-    roots = jnp.asarray(roots, jnp.int32)
-    n_dev = int(mesh.shape[root_axis])
-    n = roots.shape[0]
-    pad = (-n) % n_dev
-    if pad:
-        roots = jnp.concatenate([roots, jnp.broadcast_to(roots[:1], (pad,))])
-    use_core = core is not None
-    fn = _sharded_batch_fn(mesh, root_axis, alpha, beta, use_core,
-                           max_levels, not kops.interpret_mode())
-    res = fn(chunks, degree, n_active, roots, core if use_core else None)
-    if pad:
-        res = jax.tree_util.tree_map(lambda x: x[:n], res)
-    return res
+    from repro.core import plan as plan_api
+
+    plan_api.warn_deprecated(
+        "bfs_batch_sharded", 'BFSPlan(layout=("root",))')
+    p = plan_api.BFSPlan(engine="bitmap", layout=("root",),
+                         batch_roots=True, alpha=alpha, beta=beta,
+                         max_levels=max_levels, n_chunks=n_chunks)
+    compiled = plan_api.compile_plan(
+        p, plan_api.PreparedGraph(ev=ev, degree=degree, core=core,
+                                  chunks=chunks),
+        mesh=mesh, axis_names=(root_axis,))
+    return compiled.bfs(roots)
 
 
 # ---------------------------------------------------------------------------
@@ -673,13 +620,24 @@ def bfs_batch_sharded(
 SHARD_EXCHANGES = ("hier_or", "hier_gather", "flat")
 
 
-def _shard_index(group_axis: str, member_axis: str):
+def _axis_names_tuple(name) -> tuple:
+    """Normalize a mesh-axis role to a tuple of concrete axis names.
+
+    The dry-run lowers the engine on production meshes where the group
+    role spans several mesh axes (e.g. ``("pod", "data")``); the runtime
+    meshes use plain strings.
+    """
+    return tuple(name) if isinstance(name, (tuple, list)) else (name,)
+
+
+def _shard_index(group_axis, member_axis):
     """Flat device index (group-major) of this shard inside shard_map."""
     from repro.util import axis_size
 
-    gi = jax.lax.axis_index(group_axis)
-    mi = jax.lax.axis_index(member_axis)
-    return gi * axis_size(member_axis) + mi
+    idx = jnp.int32(0)
+    for n in _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis):
+        idx = idx * axis_size(n) + jax.lax.axis_index(n)
+    return idx
 
 
 def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
@@ -704,7 +662,7 @@ def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
         hierarchical_por,
     )
 
-    axes = (group_axis, member_axis)
+    axes = _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis)
     if exchange == "hier_or":
         full = jnp.zeros((n_dev * w_loc,), jnp.uint32)
         full = jax.lax.dynamic_update_slice(full, delta_loc, (dev * w_loc,))
@@ -781,7 +739,7 @@ def _run_bitmap_sharded(
     replicated stats; parents are bitwise-identical to the single-device
     engine.
     """
-    axes = (group_axis, member_axis)
+    axes = _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis)
     v_loc = w_loc * 32
     v_pad = n_dev * v_loc          # sentinel (padded global vertex count)
     w_pad = n_dev * w_loc

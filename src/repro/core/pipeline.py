@@ -16,6 +16,16 @@ Extra rungs beyond the paper's figure:
                      "before" for BENCH_bfs.json;
   pre-g500-batch   : the resident engine with all search keys vmapped
                      into ONE jitted program (``batched=True``).
+
+Every rung is executed by constructing a :class:`repro.core.plan.BFSPlan`
+(:meth:`Graph500Config.to_plan`) and running it through
+:func:`repro.core.plan.compile_plan` — the mesh rungs are just layouts:
+
+  pre-g500-mesh    : ``layout=("root",)`` — roots split over all visible
+                     devices (layer 1, zero comms);
+  pre-g500-mesh3   : ``layout=("root", "group", "member")`` — the
+                     composed 3-axis plan (root batch over its own mesh
+                     axis outside the vertex-sharded SPMD program).
 """
 from __future__ import annotations
 
@@ -29,8 +39,9 @@ from repro.core import kronecker
 from repro.core.bfs_steps import EdgeView, edge_view
 from repro.core.graph_build import build_csr
 from repro.core.heavy import HeavyCore, build_heavy_core
+from repro.core.plan import BFSPlan, compile_plan
 from repro.core.reorder import Reordering, degree_reorder, relabel_edges
-from repro.core.teps import Graph500Run, run_graph500, run_graph500_batched
+from repro.core.teps import Graph500Run
 
 
 @dataclass(frozen=True)
@@ -47,7 +58,13 @@ class Graph500Config:
     batched: bool = False                  # one jitted program for all roots
     # Mesh sharding (DESIGN.md §9): root_devices > 0 shard_maps the batch
     # over a ("root",) mesh of that many devices (layer 1, zero comms).
+    # 0 means "all visible devices".
     root_devices: Optional[int] = None
+    # Explicit plan layout/mesh (DESIGN.md §10) — overrides root_devices.
+    # None keeps the legacy-knob derivation; () forces single device.
+    layout: Optional[tuple] = None
+    mesh_shape: Optional[tuple] = None
+    exchange: str = "hier_or"
 
     @staticmethod
     def ladder(rung: str, **kw) -> "Graph500Config":
@@ -68,8 +85,34 @@ class Graph500Config:
             "pre-g500-mesh": dict(degree_sort=True, heavy_threshold=100,
                                   engine="bitmap", batched=True,
                                   root_devices=0),
+            # composed layer-1 x layer-2 rung: root batch over its own
+            # mesh axis outside the vertex-sharded SPMD program; mesh
+            # shape from plan_device_mesh unless mesh_shape is given.
+            "pre-g500-mesh3": dict(degree_sort=True, heavy_threshold=100,
+                                   engine="bitmap", batched=True,
+                                   layout=("root", "group", "member")),
         }
         return Graph500Config(**{**presets[rung], **kw})
+
+    def to_plan(self) -> BFSPlan:
+        """Lower the config knobs onto the declarative plan axes."""
+        if self.layout is not None:
+            layout, mesh_shape = tuple(self.layout), self.mesh_shape
+        elif self.root_devices is not None:
+            if not self.batched:
+                raise ValueError(
+                    "root_devices requires batched=True (the mesh shards "
+                    "the batched harness's root vector)")
+            layout = ("root",)
+            mesh_shape = ((self.root_devices,)
+                          if self.root_devices else None)
+        else:
+            layout, mesh_shape = (), None
+        return BFSPlan(
+            engine=self.engine, layout=layout, mesh_shape=mesh_shape,
+            exchange=self.exchange, alpha=self.alpha, beta=self.beta,
+            batch_roots=self.batched,
+        )
 
 
 @dataclass
@@ -106,30 +149,11 @@ def build(cfg: Graph500Config) -> BuiltGraph:
 
 
 def run(cfg: Graph500Config, built: BuiltGraph | None = None) -> tuple[BuiltGraph, Graph500Run]:
+    """Steps 3-4: compile the config's plan and run the timed harness."""
     built = built or build(cfg)
     edges = kronecker.generate_edges(cfg.seed, cfg.scale, cfg.edge_factor)
     roots = kronecker.sample_roots(cfg.seed, edges, cfg.n_roots)
     if built.reorder is not None:
         roots = built.reorder.new_from_old[roots]
-    if cfg.root_devices is not None and not cfg.batched:
-        raise ValueError("root_devices requires batched=True (the mesh "
-                         "shards the batched harness's root vector)")
-    if cfg.batched:
-        if cfg.engine != "bitmap":
-            raise ValueError("batched harness requires engine='bitmap'")
-        mesh = None
-        if cfg.root_devices is not None:
-            from repro.launch.mesh import make_root_mesh
-            mesh = make_root_mesh(cfg.root_devices or None)
-        result = run_graph500_batched(
-            built.ev, built.degree, roots,
-            core=built.core, alpha=cfg.alpha, beta=cfg.beta,
-            mesh=mesh,
-        )
-    else:
-        result = run_graph500(
-            built.ev, built.degree, roots,
-            core=built.core, engine=cfg.engine,
-            alpha=cfg.alpha, beta=cfg.beta,
-        )
-    return built, result
+    compiled = compile_plan(cfg.to_plan(), built)
+    return built, compiled.run(roots).run

@@ -1,0 +1,698 @@
+"""Declarative spec→plan→runner API for the Graph500 engines (DESIGN.md §10).
+
+The paper's pipeline is ONE configurable system — hybrid
+direction-optimizing BFS (T1/T2), degree-sorted heavy-vertex handling,
+group-based monitor communication (T3) — and Buluç–Madduri
+(arXiv:1104.4518) shows the partitionings are points in one design space
+selected per run.  This module makes that the API:
+
+  1. **spec** — :class:`BFSPlan`, a frozen dataclass naming the engine,
+     the mesh *layout* (which of the three axes ``root`` / ``group`` /
+     ``member`` exist and their sizes), the delta-exchange strategy, the
+     direction-switch α/β and the chunking knobs.  Sharding layout,
+     exchange wiring and root batching are orthogonal declarative axes —
+     not separate entry points.
+  2. **plan** — :func:`compile_plan` validates the spec against the
+     available devices and :func:`repro.comms.topology.plan_device_mesh`,
+     builds (or checks) the device mesh, prepares the graph inputs
+     (chunked edge view / dst-owned shard partition) and closes over ONE
+     jitted / ``shard_map``'d callable.  Every invalid combination is a
+     ``ValueError`` here, never a shard_map trace error.
+  3. **runner** — :meth:`CompiledBFS.run` executes the Graph500 timed
+     harness (warmup outside the timed region, spec validation per root,
+     harmonic-mean TEPS) and returns a uniform :class:`Graph500Result`
+     whatever the layout.
+
+Layouts (all bitwise-locked to the single-device bitmap engine):
+
+  ``()``                          one device; ``batch_roots`` selects the
+                                  fused 64-root program vs per-root runs.
+  ``("root",)``                   layer 1 — roots split over a 1-D mesh,
+                                  graph replicated, zero communication.
+  ``("group", "member")``         layer 2 — one traversal vertex-sharded
+                                  over the monitor-group mesh, per-level
+                                  delta bitmaps OR-combined via the T3
+                                  two-phase collective.
+  ``("root", "group", "member")`` layer 1 × layer 2 composed: the root
+                                  vector splits over its own mesh axis
+                                  OUTSIDE the vertex-sharded SPMD program
+                                  — each root-slice of devices runs the
+                                  full layer-2 traversal for its roots.
+
+The six pre-plan entry points (``hybrid_bfs``, ``bfs_batch``,
+``bfs_batch_sharded``, ``make_dist_bfs``, ``run_graph500_batched``,
+``run_graph500_sharded``) survive as thin deprecation shims over this
+module; see DESIGN.md §10 for the migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+import warnings
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bfs_steps import (
+    DEFAULT_CHUNKS,
+    ChunkedEdgeView,
+    EdgeView,
+    chunk_edge_view,
+)
+from repro.core.distributed_bfs import ShardedGraph, shard_graph
+from repro.core.heavy import HeavyCore
+from repro.core.hybrid_bfs import (
+    ENGINES,
+    MAX_LEVELS,
+    SHARD_EXCHANGES,
+    BFSResult,
+    _axis_names_tuple as _axis_tuple,
+    _run_batch,
+    _run_bitmap,
+    _run_bitmap_impl,
+    _run_bitmap_sharded,
+    _run_legacy,
+)
+from repro.core.teps import Graph500Run, traversed_edges
+from repro.core.validate import validate
+from repro.kernels import ops as kops
+from repro.util import make_mesh, shard_map
+
+VALID_LAYOUTS = (
+    (),
+    ("root",),
+    ("group", "member"),
+    ("root", "group", "member"),
+)
+
+
+# ---------------------------------------------------------------------------
+# 1. Spec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BFSPlan:
+    """Frozen declarative spec of one Graph500 BFS execution.
+
+    Field → paper-technique mapping (full table in DESIGN.md §10):
+
+      ``engine``      Fig. 18 ladder rung (reference / legacy / bitmap-T1)
+      ``layout``      which mesh axes exist — §4.2 partitioning choice
+      ``mesh_shape``  per-axis sizes; ``None`` infers from the visible
+                      devices (the (group, member) split comes from the
+                      eq.-5 interconnect model via ``plan_device_mesh``)
+      ``exchange``    §4.3 monitor wiring of the per-level delta combine
+      ``alpha/beta``  eq. (1)/(2) direction-switch thresholds
+      ``max_levels``  traversal bound (static loop trip limit)
+      ``n_chunks``    frontier-proportional top-down granularity (§3)
+      ``batch_roots`` all search keys in ONE program (vmap) vs one
+                      program per root
+    """
+
+    engine: str = "bitmap"
+    layout: tuple = ()
+    mesh_shape: Optional[tuple] = None
+    exchange: str = "hier_or"
+    alpha: float = 14.0
+    beta: float = 24.0
+    max_levels: int = MAX_LEVELS
+    n_chunks: int = DEFAULT_CHUNKS
+    batch_roots: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "layout", tuple(self.layout))
+        if self.mesh_shape is not None:
+            object.__setattr__(
+                self, "mesh_shape", tuple(int(s) for s in self.mesh_shape))
+
+    def to_dict(self) -> dict:
+        """JSON-ready dict (recorded in BENCH_bfs.json rung metadata)."""
+        d = dataclasses.asdict(self)
+        d["layout"] = list(self.layout)
+        d["mesh_shape"] = (list(self.mesh_shape)
+                           if self.mesh_shape is not None else None)
+        return d
+
+
+@dataclass
+class PreparedGraph:
+    """Graph-side inputs for :func:`compile_plan`.
+
+    ``compile_plan`` accepts either this or any object exposing the same
+    attributes (``pipeline.BuiltGraph`` qualifies).  Missing derived
+    structures are built on demand: the chunked edge view for
+    single-device / root-parallel layouts, the dst-owned shard partition
+    (:func:`repro.core.distributed_bfs.shard_graph`) for vertex-sharded
+    layouts.
+    """
+
+    ev: Optional[EdgeView] = None
+    degree: Optional[jax.Array] = None
+    core: Optional[HeavyCore] = None
+    chunks: Optional[ChunkedEdgeView] = None
+    sharded: Optional[ShardedGraph] = None
+
+
+class ShardedRun(NamedTuple):
+    """Raw vertex-sharded output: padded global parent/level (+ levels)."""
+
+    parent: jax.Array   # [..., V_pad] int32, -1 unvisited
+    level: jax.Array    # [..., V_pad] int32
+    levels: jax.Array   # per-root levels run
+
+
+@dataclass
+class Graph500Result:
+    """Uniform runner output, whatever the plan layout.
+
+    ``parent``/``level`` are in global vertex order with any shard
+    padding stripped; ``run`` carries the Graph500 timing/validation
+    bookkeeping (harmonic-mean TEPS per the spec §Output).
+    """
+
+    parent: np.ndarray          # [R, V] int32
+    level: np.ndarray           # [R, V] int32
+    run: Graph500Run
+    plan: BFSPlan
+    mesh_axes: Optional[dict]   # {axis: size} of the resolved mesh
+
+
+def warn_deprecated(old: str, replacement: str) -> None:
+    """Deprecation notice shared by the six legacy entrypoint shims."""
+    warnings.warn(
+        f"{old} is deprecated; construct a BFSPlan and compile_plan it "
+        f"instead ({replacement}) — see DESIGN.md §10",
+        DeprecationWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# 2. Validation + mesh resolution
+# ---------------------------------------------------------------------------
+
+def _flat_names(names) -> tuple:
+    out: list = []
+    for n in names:
+        out.extend(_axis_tuple(n))
+    return tuple(out)
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def validate_plan(plan: BFSPlan) -> None:
+    """Field-level checks (no devices touched) — all errors are ValueError."""
+    if plan.engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {plan.engine!r}; expected one of {ENGINES}")
+    if plan.layout not in VALID_LAYOUTS:
+        raise ValueError(
+            f"unknown layout {plan.layout!r}; expected one of {VALID_LAYOUTS}")
+    if plan.exchange not in SHARD_EXCHANGES:
+        raise ValueError(
+            f"unknown exchange {plan.exchange!r}; expected one of "
+            f"{SHARD_EXCHANGES}")
+    if plan.layout and plan.engine != "bitmap":
+        raise ValueError(
+            f"mesh layout {plan.layout} requires engine='bitmap' "
+            f"(got {plan.engine!r}); the legacy engines are single-device")
+    if "root" in plan.layout and not plan.batch_roots:
+        raise ValueError(
+            "layout with a 'root' axis requires batch_roots=True "
+            "(the mesh shards the batched root vector)")
+    if plan.batch_roots and plan.engine != "bitmap":
+        raise ValueError(
+            f"batch_roots=True requires engine='bitmap' (got "
+            f"{plan.engine!r}); use batch_roots=False for per-root runs")
+    if plan.mesh_shape is not None:
+        if not plan.layout:
+            raise ValueError("mesh_shape given but layout is () "
+                             "(single device has no mesh)")
+        if len(plan.mesh_shape) != len(plan.layout):
+            raise ValueError(
+                f"mesh_shape {plan.mesh_shape} does not match layout "
+                f"{plan.layout} (need one size per axis)")
+        if any(s < 1 for s in plan.mesh_shape):
+            raise ValueError(f"mesh_shape sizes must be >= 1, got "
+                             f"{plan.mesh_shape}")
+        if "member" in plan.layout:
+            m = plan.mesh_shape[plan.layout.index("member")]
+            if not _is_pow2(m):
+                raise ValueError(
+                    f"member axis size {m} is not a power of two; the "
+                    f"plan API requires pow2 members so the two-phase "
+                    f"monitor collectives halve cleanly (pass a prebuilt "
+                    f"mesh= to opt out)")
+    if plan.n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {plan.n_chunks}")
+
+
+def _resolve_mesh(plan: BFSPlan, mesh, axis_names):
+    """Return (mesh, names) for the plan — names[i] is the concrete mesh
+    axis (str, or tuple of axes for a factored role) playing layout role
+    ``plan.layout[i]``.
+
+    With ``mesh=None`` the mesh is built over the visible devices: the
+    ``("root",)`` layout takes them all, vertex layouts take the
+    (group, member) split from the interconnect model
+    (:func:`repro.comms.topology.plan_device_mesh` — member sized to the
+    router group), and the composed 3-axis layout defaults to one root
+    lane over the planned vertex mesh.  Infeasible shapes (too few
+    devices, planner-derived non-power-of-two member) raise ValueError
+    here, before any tracing.
+    """
+    if not plan.layout:
+        if mesh is not None:
+            raise ValueError("plan layout is () (single device) but a mesh "
+                             "was passed")
+        return None, ()
+    names = tuple(axis_names) if axis_names is not None else plan.layout
+    if len(names) != len(plan.layout):
+        raise ValueError(f"axis_names {names} does not match layout "
+                         f"{plan.layout}")
+    if mesh is None and names != plan.layout:
+        raise ValueError(
+            f"axis_names {names} requires a prebuilt mesh= — a mesh built "
+            f"by compile_plan uses the layout role names {plan.layout}")
+
+    if mesh is not None:
+        flat = _flat_names(names)
+        if tuple(mesh.axis_names) != flat:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.axis_names)} do not cover the plan "
+                f"layout axes {flat}")
+        if plan.mesh_shape is not None:
+            sizes = tuple(
+                math.prod(mesh.shape[a] for a in _axis_tuple(n))
+                for n in names)
+            if sizes != plan.mesh_shape:
+                raise ValueError(
+                    f"mesh sizes {sizes} do not match plan.mesh_shape "
+                    f"{plan.mesh_shape}")
+        return mesh, names
+
+    n_avail = len(jax.devices())
+    shape = plan.mesh_shape
+    if shape is None:
+        from repro.comms.topology import plan_device_mesh
+        if plan.layout == ("root",):
+            shape = (n_avail,)
+        elif plan.layout == ("group", "member"):
+            shape = plan_device_mesh(n_avail)
+        else:  # composed 3-axis: one root lane over the planned vertex mesh
+            shape = (1,) + plan_device_mesh(n_avail)
+        if "member" in plan.layout:
+            m = shape[plan.layout.index("member")]
+            if not _is_pow2(m):
+                raise ValueError(
+                    f"plan_device_mesh({n_avail}) yields a member axis of "
+                    f"{m} (not a power of two); pass an explicit "
+                    f"mesh_shape for this device count")
+    need = math.prod(shape)
+    if need > n_avail:
+        raise ValueError(
+            f"plan layout {plan.layout} with mesh shape {shape} needs "
+            f"{need} devices, have {n_avail} — force host devices via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} or "
+            f"shrink mesh_shape")
+    return make_mesh(shape, plan.layout), names
+
+
+def _role_size(mesh, name) -> int:
+    return math.prod(int(mesh.shape[a]) for a in _axis_tuple(name))
+
+
+def _prepare(built, plan: BFSPlan, n_dev_vertex: int) -> PreparedGraph:
+    if isinstance(built, PreparedGraph):
+        pg = dataclasses.replace(built)
+    else:
+        pg = PreparedGraph(
+            ev=getattr(built, "ev", None),
+            degree=getattr(built, "degree", None),
+            core=getattr(built, "core", None),
+            chunks=getattr(built, "chunks", None),
+            sharded=getattr(built, "sharded", None),
+        )
+    if "member" in plan.layout:
+        if pg.sharded is None:
+            if pg.ev is None:
+                raise ValueError(
+                    "vertex-sharded plan needs built.ev (an EdgeView) or a "
+                    "pre-built ShardedGraph (built.sharded)")
+            pg.sharded = shard_graph(
+                np.asarray(pg.ev.src), np.asarray(pg.ev.dst),
+                np.asarray(pg.ev.valid), pg.ev.num_vertices,
+                n_dev_vertex, plan.n_chunks)
+        elif pg.sharded.n_devices != n_dev_vertex:
+            raise ValueError(
+                f"ShardedGraph was partitioned for "
+                f"{pg.sharded.n_devices} devices but the plan mesh has "
+                f"{n_dev_vertex} (group x member)")
+    else:
+        if pg.ev is None:
+            raise ValueError("plan needs built.ev (an EdgeView)")
+        if pg.degree is None:
+            raise ValueError("plan needs built.degree")
+        if plan.engine == "bitmap" and pg.chunks is None:
+            pg.chunks = chunk_edge_view(pg.ev, plan.n_chunks)
+    return pg
+
+
+# ---------------------------------------------------------------------------
+# 3. Programs — the ONE copy of each shard_map wiring, cached per
+#    (mesh, statics) so repeated compiles reuse the jitted executable.
+# ---------------------------------------------------------------------------
+
+_MESH_FN_CACHE: dict = {}
+
+
+def _root_parallel_fn(mesh, root_axis, alpha, beta, use_core, max_levels,
+                      use_pallas_core):
+    """Jitted layer-1 program: roots split over ``root_axis``, graph
+    replicated, zero communication."""
+    key = ("root", mesh, root_axis, alpha, beta, use_core, max_levels,
+           use_pallas_core)
+    fn = _MESH_FN_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def local(chunks, degree, n_active, roots, core):
+        return jax.vmap(
+            lambda r: _run_bitmap_impl(
+                chunks, degree, n_active, r, core,
+                alpha=alpha, beta=beta, use_core=use_core,
+                max_levels=max_levels, use_pallas_core=use_pallas_core)
+        )(roots)
+
+    fn = jax.jit(shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(root_axis), P()),
+        out_specs=P(root_axis),
+        check=False,
+    ))
+    _MESH_FN_CACHE[key] = fn
+    return fn
+
+
+def vertex_sharded_program(
+    mesh,
+    *,
+    w_loc: int,
+    n_dev: int,
+    group_axis="group",
+    member_axis: str = "member",
+    root_axis: Optional[str] = None,
+    exchange: str = "hier_or",
+    alpha: float = 14.0,
+    beta: float = 24.0,
+    use_core: bool = False,
+    max_levels: int = MAX_LEVELS,
+    use_pallas_core: bool = False,
+    batched: bool = False,
+):
+    """Build the UNJITTED shard_map'd vertex-sharded BFS program.
+
+    The one copy of the layer-2 (and composed layer-1×2) shard_map
+    wiring: :func:`compile_plan` jits it for execution and
+    ``launch/input_specs.graph500_cell`` lowers it shape-only for the
+    256/512-chip dry-run cost cells.  ``group_axis`` may be a *tuple* of
+    mesh axes (the dry-run's ``("pod", "data")`` group).  With
+    ``root_axis`` set, the roots vector splits over that axis OUTSIDE
+    this SPMD program — the composed ``("root", "group", "member")``
+    layout — and the body vmaps its local root slice.
+
+    Signature of the returned function::
+
+        f(roots, src, dst_local, valid, src_lo, src_hi, degree_local,
+          n_active[, core]) -> (parent, level, levels)
+
+    (``core`` is an argument only when ``use_core``.)
+    """
+    va = _flat_names((group_axis, member_axis))
+    run_one = functools.partial(
+        _run_bitmap_sharded,
+        alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
+        use_pallas_core=use_pallas_core, w_loc=w_loc, n_dev=n_dev,
+        group_axis=group_axis, member_axis=member_axis, exchange=exchange,
+    )
+    vmapped = batched or root_axis is not None
+
+    def local(roots, src, dst_local, valid, src_lo, src_hi, degree_local,
+              n_active, *maybe_core):
+        core = maybe_core[0] if use_core else None
+        args = (src[0], dst_local[0], valid[0], src_lo[0], src_hi[0],
+                degree_local[0])
+        if vmapped:
+            res = jax.vmap(lambda r: run_one(*args, n_active, r, core))(roots)
+        else:
+            res = run_one(*args, n_active, roots, core)
+        return res.parent, res.level, res.stats.levels
+
+    g_spec = P(va)
+    core_specs = (P(),) if use_core else ()
+    if root_axis is not None:
+        in_specs = (P(root_axis),) + (g_spec,) * 6 + (P(),) + core_specs
+        out_specs = (P(root_axis, va), P(root_axis, va), P(root_axis))
+    elif batched:
+        in_specs = (P(),) + (g_spec,) * 6 + (P(),) + core_specs
+        out_specs = (P(None, va), P(None, va), P())
+    else:
+        in_specs = (P(),) + (g_spec,) * 6 + (P(),) + core_specs
+        out_specs = (P(va), P(va), P())
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check=False)
+
+
+def _vertex_fn(mesh, **kw):
+    key = ("vertex", mesh, tuple(sorted(kw.items())))
+    fn = _MESH_FN_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(vertex_sharded_program(mesh, **kw))
+        _MESH_FN_CACHE[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# 4. compile_plan + the runner
+# ---------------------------------------------------------------------------
+
+def compile_plan(plan: BFSPlan, built, *, mesh=None,
+                 axis_names=None) -> "CompiledBFS":
+    """Validate ``plan``, prepare the graph inputs, and close over one
+    jitted (possibly shard_map'd) callable.
+
+    ``built`` is a :class:`PreparedGraph` or anything exposing
+    ``ev``/``degree``/``core`` (``pipeline.BuiltGraph``).  ``mesh`` lets
+    callers supply a prebuilt device mesh (its axes must cover the plan
+    layout; the legacy shims use this — plan-level strictness like the
+    power-of-two member check is skipped for caller-supplied meshes).
+    ``axis_names`` renames layout roles onto concrete mesh axes (entries
+    may be tuples for factored roles).
+    """
+    validate_plan(plan)
+    mesh, names = _resolve_mesh(plan, mesh, axis_names)
+    role = dict(zip(plan.layout, names))
+    vertexy = "member" in plan.layout
+    n_dev_vertex = 1
+    if vertexy:
+        n_dev_vertex = (_role_size(mesh, role["group"])
+                        * _role_size(mesh, role["member"]))
+    pg = _prepare(built, plan, n_dev_vertex)
+    use_core = pg.core is not None
+    use_pallas = not kops.interpret_mode()
+    root_axis_size = _role_size(mesh, role["root"]) if "root" in role else 1
+
+    if not plan.layout:
+        if plan.batch_roots:
+            chunks, degree, core = pg.chunks, pg.degree, pg.core
+            n_active = jnp.sum(degree > 0).astype(jnp.int32)
+
+            def raw(roots):
+                return _run_batch(
+                    chunks, degree, n_active, roots,
+                    core if use_core else None,
+                    alpha=plan.alpha, beta=plan.beta, use_core=use_core,
+                    max_levels=plan.max_levels, use_pallas_core=use_pallas)
+        else:
+            ev, chunks, degree, core = pg.ev, pg.chunks, pg.degree, pg.core
+            n_active = jnp.sum(degree > 0).astype(jnp.int32)
+            engine = plan.engine
+            legacy_core = engine == "legacy" and use_core
+
+            def raw(root):
+                if engine == "bitmap":
+                    return _run_bitmap(
+                        chunks, degree, n_active, root,
+                        core if use_core else None,
+                        alpha=plan.alpha, beta=plan.beta, use_core=use_core,
+                        max_levels=plan.max_levels)
+                return _run_legacy(
+                    ev, degree, n_active, root,
+                    core if legacy_core else None,
+                    engine=engine, alpha=plan.alpha, beta=plan.beta,
+                    use_core=legacy_core, max_levels=plan.max_levels)
+
+        v_orig = pg.ev.num_vertices
+    elif plan.layout == ("root",):
+        chunks, degree, core = pg.chunks, pg.degree, pg.core
+        n_active = jnp.sum(degree > 0).astype(jnp.int32)
+        fn = _root_parallel_fn(mesh, role["root"], plan.alpha, plan.beta,
+                               use_core, plan.max_levels, use_pallas)
+
+        def raw(roots):
+            return fn(chunks, degree, n_active, roots,
+                      core if use_core else None)
+
+        v_orig = pg.ev.num_vertices
+    else:
+        sg = pg.sharded
+        fn = _vertex_fn(
+            mesh,
+            w_loc=sg.w_loc, n_dev=sg.n_devices,
+            group_axis=role["group"], member_axis=role["member"],
+            root_axis=role.get("root"),
+            exchange=plan.exchange, alpha=plan.alpha, beta=plan.beta,
+            use_core=use_core, max_levels=plan.max_levels,
+            use_pallas_core=use_pallas, batched=plan.batch_roots,
+        )
+        core_args = (pg.core,) if use_core else ()
+
+        def raw(roots):
+            return fn(roots, sg.src, sg.dst_local, sg.valid, sg.src_lo,
+                      sg.src_hi, sg.degree_local, sg.n_active, *core_args)
+
+        v_orig = sg.v_orig
+
+    return CompiledBFS(
+        plan=plan, mesh=mesh, graph=pg, num_vertices=v_orig,
+        _raw=raw, _vertexy=vertexy, _root_axis_size=root_axis_size,
+        _axis_names=names,
+    )
+
+
+@dataclass
+class CompiledBFS:
+    """A validated plan closed over one jitted callable.
+
+    ``bfs`` returns layout-native raw results (a batched
+    :class:`BFSResult` for root layouts, a :class:`ShardedRun` with
+    padded global vertex order for vertex layouts); ``run`` executes the
+    timed Graph500 harness and returns the uniform
+    :class:`Graph500Result`.
+    """
+
+    plan: BFSPlan
+    mesh: Any
+    graph: PreparedGraph
+    num_vertices: int           # original V (before shard padding)
+    _raw: Callable
+    _vertexy: bool = False
+    _root_axis_size: int = 1
+    _axis_names: tuple = ()
+
+    @property
+    def mesh_axes(self) -> Optional[dict]:
+        if self.mesh is None:
+            return None
+        return {role: _role_size(self.mesh, name)
+                for role, name in zip(self.plan.layout, self._axis_names)}
+
+    def bfs(self, roots):
+        """Raw traversal(s).  ``batch_roots`` plans take a root vector
+        (padded to the root-axis size with ``roots[0]`` and sliced back);
+        per-root plans take a scalar root."""
+        if not self.plan.batch_roots:
+            out = self._raw(jnp.asarray(roots, jnp.int32))
+            return ShardedRun(*out) if self._vertexy else out
+        roots = jnp.asarray(roots, jnp.int32)
+        n = roots.shape[0]
+        pad = (-n) % self._root_axis_size
+        if pad:
+            roots = jnp.concatenate(
+                [roots, jnp.broadcast_to(roots[:1], (pad,))])
+        out = self._raw(roots)
+        if self._vertexy:
+            out = ShardedRun(*out)
+        if pad:
+            out = jax.tree_util.tree_map(lambda x: x[:n], out)
+        return out
+
+    def run(self, roots, *, warmup: bool = True,
+            do_validate: bool = True) -> Graph500Result:
+        """Graph500 steps 3 + 4 under this plan.
+
+        Batched plans time ONE fused program and attribute
+        wall-clock / n_roots to each search (DESIGN.md §8); per-root
+        plans time each search separately.  Spec validation runs per
+        root when ``do_validate`` is on AND the unsharded edge view is
+        available; otherwise ``validated`` stays empty, so ``all_valid``
+        reports False rather than vacuously True.  (This is stricter
+        than the legacy harnesses, which recorded True per root under
+        ``do_validate=False`` — the deprecation shims backfill that.)
+        """
+        if self.graph.degree is None:
+            raise ValueError("CompiledBFS.run needs built.degree for the "
+                             "TEPS edge count (pass it via PreparedGraph)")
+        roots_np = np.asarray(roots, np.int32).reshape(-1)
+        n = len(roots_np)
+        v = self.num_vertices
+        g500 = Graph500Run(batched=self.plan.batch_roots)
+        if n == 0:
+            return Graph500Result(
+                np.zeros((0, v), np.int32), np.zeros((0, v), np.int32),
+                g500, self.plan, self.mesh_axes)
+        degree = self.graph.degree
+
+        def strip(x):   # drop shard padding on the device, not via H2D
+            return x if x.shape[-1] == v else x[..., :v]
+
+        if self.plan.batch_roots:
+            if warmup:
+                jax.block_until_ready(self.bfs(roots_np).parent)
+            t0 = time.perf_counter()
+            res = self.bfs(roots_np)
+            res.parent.block_until_ready()
+            per_root_s = (time.perf_counter() - t0) / n
+            parent_dev = strip(res.parent)
+            level_dev = strip(res.level)
+            m_all = jax.vmap(lambda p: traversed_edges(
+                degree, BFSResult(parent=p, level=None, stats=None))
+            )(parent_dev)
+            times = [per_root_s] * n
+        else:
+            if warmup:
+                jax.block_until_ready(self.bfs(int(roots_np[0])).parent)
+            rows, times = [], []
+            for r in roots_np:
+                t0 = time.perf_counter()
+                res = self.bfs(int(r))
+                res.parent.block_until_ready()
+                times.append(time.perf_counter() - t0)
+                rows.append((strip(res.parent), strip(res.level)))
+            parent_dev = jnp.stack([p for p, _ in rows])
+            level_dev = jnp.stack([l for _, l in rows])
+            m_all = jnp.asarray([traversed_edges(
+                degree, BFSResult(parent=p, level=None, stats=None))
+                for p, _ in rows])
+
+        m_np = np.asarray(m_all)
+        ev = self.graph.ev
+        for i, r in enumerate(roots_np):
+            m, dt = int(m_np[i]), times[i]
+            g500.times_s.append(dt)
+            g500.edges.append(m)
+            g500.teps.append(m / dt if dt > 0 else 0.0)
+            if do_validate and ev is not None:
+                single = BFSResult(parent=parent_dev[i], level=level_dev[i],
+                                   stats=None)
+                g500.validated.append(
+                    bool(validate(ev, single, jnp.int32(int(r))).ok))
+        return Graph500Result(np.asarray(parent_dev), np.asarray(level_dev),
+                              g500, self.plan, self.mesh_axes)

@@ -20,21 +20,14 @@ Per the spec the headline figure is the **harmonic mean** TEPS across the
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bfs_steps import DEFAULT_CHUNKS, EdgeView, chunk_edge_view
-from repro.core.hybrid_bfs import (
-    BFSResult,
-    bfs_batch,
-    bfs_batch_sharded,
-    hybrid_bfs,
-)
-from repro.core.validate import validate
+from repro.core.bfs_steps import DEFAULT_CHUNKS, EdgeView
+from repro.core.hybrid_bfs import BFSResult
 
 
 def traversed_edges(degree: jax.Array, result: BFSResult) -> jax.Array:
@@ -78,37 +71,23 @@ def run_graph500(
     warmup: bool = True,
     n_chunks: int = DEFAULT_CHUNKS,
 ) -> Graph500Run:
-    """Timed BFS over the given roots (Graph500 step 3 + 4), one at a time."""
-    run = Graph500Run()
-    roots = np.asarray(roots)
-    # The chunked edge view is part of graph construction (untimed); build
-    # it once so per-root timings only cover the traversal.
-    chunks = chunk_edge_view(ev, n_chunks) if engine == "bitmap" else None
-    if warmup and len(roots):
-        # compile outside the timed region, per spec (construction untimed)
-        hybrid_bfs(ev, degree, int(roots[0]), core=core, engine=engine,
-                   alpha=alpha, beta=beta, chunks=chunks,
-                   ).parent.block_until_ready()
-    for r in roots:
-        t0 = time.perf_counter()
-        res = hybrid_bfs(ev, degree, int(r), core=core, engine=engine,
-                         alpha=alpha, beta=beta, chunks=chunks)
-        res.parent.block_until_ready()
-        dt = time.perf_counter() - t0
-        m = int(traversed_edges(degree, res))
-        run.times_s.append(dt)
-        run.edges.append(m)
-        run.teps.append(m / dt if dt > 0 else 0.0)
-        if do_validate:
-            run.validated.append(bool(validate(ev, res, jnp.int32(int(r))).ok))
-        else:
-            run.validated.append(True)
+    """Timed BFS over the given roots (Graph500 step 3 + 4), one at a time.
+
+    A per-root plan run: ``BFSPlan(engine=engine, layout=(),
+    batch_roots=False)`` — the chunked edge view is built once at compile
+    time (graph construction is untimed per spec) and each search is
+    timed separately, closest to the reference driver loop.
+    """
+    from repro.core.plan import BFSPlan, PreparedGraph, compile_plan
+
+    p = BFSPlan(engine=engine, layout=(), batch_roots=False,
+                alpha=alpha, beta=beta, n_chunks=n_chunks)
+    compiled = compile_plan(
+        p, PreparedGraph(ev=ev, degree=degree, core=core))
+    run = compiled.run(roots, warmup=warmup, do_validate=do_validate).run
+    if not do_validate:
+        run.validated = [True] * len(run.teps)
     return run
-
-
-def _index_result(res: BFSResult, i: int) -> BFSResult:
-    """Slice root ``i`` out of a batched BFSResult."""
-    return jax.tree_util.tree_map(lambda x: x[i], res)
 
 
 def run_graph500_batched(
@@ -125,49 +104,37 @@ def run_graph500_batched(
     mesh=None,
     root_axis: str = "root",
 ) -> Graph500Run:
-    """Graph500 steps 3 + 4 with all search keys in one jitted program.
+    """DEPRECATED: fused-batch Graph500 harness — shim over the plan API.
 
-    Uses the bitmap engine via :func:`repro.core.hybrid_bfs.bfs_batch`; the
-    64 searches share one compilation and one device dispatch.  Per-search
-    time is the batch wall-clock / n_roots (see module docstring).
-
-    With ``mesh`` (a device mesh carrying ``root_axis``) the search keys
-    additionally split across devices via
-    :func:`repro.core.hybrid_bfs.bfs_batch_sharded` — root-parallel layer-1
-    sharding, zero communication, per-root outputs bitwise-identical to
-    the single-device batch.
+    Equivalent plan: ``BFSPlan(layout=(), batch_roots=True)``, or
+    ``BFSPlan(layout=("root",))`` when ``mesh`` is given (root-parallel
+    layer-1 sharding, zero communication, per-root outputs
+    bitwise-identical to the single-device batch).  All searches share
+    one compilation and one device dispatch; per-search time is the
+    batch wall-clock / n_roots (see module docstring).
     """
+    from repro.core.plan import (
+        BFSPlan, PreparedGraph, compile_plan, warn_deprecated,
+    )
+
+    warn_deprecated(
+        "run_graph500_batched",
+        "BFSPlan(layout=() or ('root',), batch_roots=True) + "
+        "CompiledBFS.run")
     run = Graph500Run(batched=True)
     roots = np.asarray(roots, dtype=np.int32)
     n = len(roots)
     if n == 0:
         return run
-    chunks = chunk_edge_view(ev, n_chunks)
-    kw = dict(core=core, alpha=alpha, beta=beta, chunks=chunks)
-    if mesh is not None:
-        kw.update(mesh=mesh, root_axis=root_axis)
-        batch_fn = bfs_batch_sharded
-    else:
-        batch_fn = bfs_batch
-    if warmup:
-        batch_fn(ev, degree, roots, **kw).parent.block_until_ready()
-    t0 = time.perf_counter()
-    res = batch_fn(ev, degree, roots, **kw)
-    res.parent.block_until_ready()
-    per_root_s = (time.perf_counter() - t0) / n
-
-    m_all = np.asarray(
-        jax.vmap(traversed_edges, in_axes=(None, 0))(degree, res))
-    for i, r in enumerate(roots):
-        m = int(m_all[i])
-        run.times_s.append(per_root_s)
-        run.edges.append(m)
-        run.teps.append(m / per_root_s if per_root_s > 0 else 0.0)
-        if do_validate:
-            single = _index_result(res, i)
-            run.validated.append(bool(validate(ev, single, jnp.int32(int(r))).ok))
-        else:
-            run.validated.append(True)
+    layout = ("root",) if mesh is not None else ()
+    p = BFSPlan(engine="bitmap", layout=layout, batch_roots=True,
+                alpha=alpha, beta=beta, n_chunks=n_chunks)
+    compiled = compile_plan(
+        p, PreparedGraph(ev=ev, degree=degree, core=core),
+        mesh=mesh, axis_names=(root_axis,) if mesh is not None else None)
+    run = compiled.run(roots, warmup=warmup, do_validate=do_validate).run
+    if not do_validate:
+        run.validated = [True] * len(run.teps)
     return run
 
 
@@ -185,50 +152,35 @@ def run_graph500_sharded(
     ev: EdgeView | None = None,
     do_validate: bool = True,
 ) -> Graph500Run:
-    """Timed Graph500 harness over the vertex-sharded engine (layer 2).
+    """DEPRECATED: vertex-sharded Graph500 harness — shim over the plan API.
 
-    All search keys run batched inside ONE SPMD program spanning the
-    (group, member) mesh: per-search time is batch wall-clock / n_roots,
-    exactly as in :func:`run_graph500_batched`.  ``sharded_graph`` comes
-    from :func:`repro.core.distributed_bfs.shard_graph`; ``degree`` is the
-    global (unsharded) degree vector used for the TEPS edge count.
-    Spec validation (step 4) runs per root when ``ev`` (the unsharded
-    edge view) is provided and ``do_validate`` is on; without ``ev`` the
-    checks cannot run, so ``validated`` stays empty and ``all_valid``
-    reports False rather than vacuously True.
+    Equivalent plan: ``BFSPlan(layout=("group", "member"),
+    exchange=exchange)`` compiled against ``mesh`` with
+    ``built.sharded = sharded_graph``.  All search keys run batched
+    inside ONE SPMD program spanning the (group, member) mesh:
+    per-search time is batch wall-clock / n_roots, exactly as in
+    :func:`run_graph500_batched`.  ``degree`` is the global (unsharded)
+    degree vector used for the TEPS edge count.  Spec validation
+    (step 4) runs per root when ``ev`` (the unsharded edge view) is
+    provided and ``do_validate`` is on; without ``ev`` the checks cannot
+    run, so ``validated`` stays empty and ``all_valid`` reports False
+    rather than vacuously True.
     """
-    from repro.core.distributed_bfs import make_dist_bfs
+    from repro.core.plan import (
+        BFSPlan, PreparedGraph, compile_plan, warn_deprecated,
+    )
 
-    run = Graph500Run(batched=True)
+    warn_deprecated(
+        "run_graph500_sharded",
+        'BFSPlan(layout=("group", "member"), exchange=...) + '
+        "CompiledBFS.run")
     roots = np.asarray(roots, dtype=np.int32)
-    n = len(roots)
-    if n == 0:
-        return run
-    fn = make_dist_bfs(mesh, sharded_graph, exchange=exchange, core=core,
-                       alpha=alpha, beta=beta, batched=True)
-    roots_j = jnp.asarray(roots)
-    if warmup:
-        fn(roots_j).parent.block_until_ready()
-    t0 = time.perf_counter()
-    res = fn(roots_j)
-    res.parent.block_until_ready()
-    per_root_s = (time.perf_counter() - t0) / n
-
-    v = int(degree.shape[0])
-    parent = np.asarray(res.parent)[:, :v]
-    level = np.asarray(res.level)[:, :v]
-    for i in range(n):
-        m = int(traversed_edges(
-            degree,
-            BFSResult(parent=jnp.asarray(parent[i]),
-                      level=jnp.asarray(level[i]), stats=None)))
-        run.times_s.append(per_root_s)
-        run.edges.append(m)
-        run.teps.append(m / per_root_s if per_root_s > 0 else 0.0)
-        if do_validate and ev is not None:
-            single = BFSResult(parent=jnp.asarray(parent[i]),
-                               level=jnp.asarray(level[i]),
-                               stats=None)
-            run.validated.append(
-                bool(validate(ev, single, jnp.int32(int(roots[i]))).ok))
-    return run
+    if len(roots) == 0:
+        return Graph500Run(batched=True)
+    p = BFSPlan(engine="bitmap", layout=("group", "member"),
+                exchange=exchange, alpha=alpha, beta=beta, batch_roots=True)
+    compiled = compile_plan(
+        p, PreparedGraph(ev=ev, degree=degree, core=core,
+                         sharded=sharded_graph),
+        mesh=mesh)
+    return compiled.run(roots, warmup=warmup, do_validate=do_validate).run

@@ -21,7 +21,6 @@ from repro.models import gnn, recsys, transformer as T
 from repro.models.gnn import Graph
 from repro.optim import AdamW, cosine
 from repro.train import train_step as TS
-from repro.util import axis_size, shard_map
 
 SDS = jax.ShapeDtypeStruct
 
@@ -523,6 +522,27 @@ def _recsys_flops(cfg, b) -> float:
 # ---------------------------------------------------------------------------
 
 def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") -> CellPlan:
+    """Lower the plan-compiled resident vertex-sharded engine shape-only.
+
+    The step IS the engine: ``core.plan.vertex_sharded_program`` — the
+    same shard_map wiring ``compile_plan`` jits for execution — bound to
+    the production mesh with the group role spanning the batch axes
+    (``("pod", "data")`` on the multi-pod mesh) and the member role on
+    ``model``, i.e. the T3 monitor group rides the cheap intra-pod
+    links.  Inputs are the ShapeDtypeStructs of a dst-owned
+    ``ShardedGraph`` partition (block word ownership, src-sorted chunks),
+    so the 256/512-chip comms/FLOPs rows model the engine that actually
+    runs (the retired cyclic pack-per-level loop previously modeled here
+    is deleted).
+
+    ``variant``: ``baseline`` lowers ``exchange="hier_or"`` (the T3
+    two-phase OR); ``gather*`` the hierarchical all-gather; ``*flat*``
+    the flat ablation.
+    """
+    from repro.core.bfs_steps import DEFAULT_CHUNKS
+    from repro.core.heavy import padded_bitmap_words
+    from repro.core.plan import vertex_sharded_program
+
     spec = get(arch)
     cell = spec.shape(shape)
     scale, ef = cell.dims["scale"], cell.dims["edge_factor"]
@@ -530,182 +550,50 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
     nd = math.prod(mesh.devices.shape)
     v = 1 << scale
     e_directed = 2 * ef * v
-    v_pad = _pad_to(v, 32 * nd)
-    e_loc = _pad_to(int(1.1 * e_directed / nd), 128)
-    v_loc = v_pad // nd
 
-    # Abstract cyclic-layout edge shards for the lowering cost model (the
-    # concrete engine lives in core/distributed_bfs + core/hybrid_bfs).
-    class _GSDS:
-        src = SDS((nd, e_loc), jnp.int32)
-        dst_local = SDS((nd, e_loc), jnp.int32)
-        valid = SDS((nd, e_loc), jnp.bool_)
+    # dst-owned block-word partition geometry (distributed_bfs.shard_graph)
+    w_loc = -(-padded_bitmap_words(v) // nd)
+    v_loc = 32 * w_loc
+    n_chunks = DEFAULT_CHUNKS
+    chunk_size = max(128, -(-int(1.1 * e_directed / nd) // n_chunks))
 
-    g_sds = _GSDS()
     if multi:
-        gaxes, maxes = ("pod", "data"), ("model",)
+        gaxes, maxes = ("pod", "data"), "model"
     else:
-        gaxes, maxes = ("data",), ("model",)
-    mesh_axes = gaxes + maxes
+        gaxes, maxes = ("data",), "model"
+    mesh_axes = gaxes + (maxes,)
     shard0 = NamedSharding(mesh, P(mesh_axes))
-    root = SDS((), jnp.int32)
+    rep = _rep(mesh)
+
+    if "flat" in variant:
+        exchange = "flat"
+    elif "gather" in variant:
+        exchange = "hier_gather"
+    else:
+        exchange = "hier_or"
+
+    step = vertex_sharded_program(
+        mesh, w_loc=w_loc, n_dev=nd, group_axis=gaxes, member_axis=maxes,
+        exchange=exchange, use_core=False, use_pallas_core=False,
+        batched=False,
+    )
+    e_sds = SDS((nd, n_chunks, chunk_size), jnp.int32)
+    args = (
+        SDS((), jnp.int32),                             # root
+        e_sds,                                          # src (global ids)
+        e_sds,                                          # dst_local
+        SDS((nd, n_chunks, chunk_size), jnp.bool_),     # valid
+        SDS((nd, n_chunks), jnp.int32),                 # src_lo
+        SDS((nd, n_chunks), jnp.int32),                 # src_hi
+        SDS((nd, v_loc), jnp.int32),                    # degree_local
+        SDS((), jnp.int32),                             # n_active
+    )
+    in_sh = (rep, shard0, shard0, shard0, shard0, shard0, shard0, rep)
+    out_sh = (shard0, shard0, rep)
     flops = 2.0 * e_directed  # semiring "flops": one AND+OR per edge/level-ish
-
-    hierarchical = "flat" not in variant
-
-    if variant.startswith("lean"):
-        # §Perf cell C: drop the valid bool array (sentinel src suffices)
-        # and feed PRE-CONVERTED owner-major source ids — kills one
-        # E-sized byte stream and two E-sized div/mod ops per level.
-        def run_lean(root, src_om, dst_local):
-            fn = shard_map(
-                _dist_bfs_local_lean(v_pad, nd, v_loc, gaxes, maxes,
-                                     hierarchical),
-                mesh=mesh,
-                in_specs=(P(), P(mesh_axes), P(mesh_axes)),
-                out_specs=(P(mesh_axes), P(mesh_axes)),
-                check=False,
-            )
-            return fn(root, src_om, dst_local)
-
-        return CellPlan(arch, shape, run_lean,
-                        (root, g_sds.src, g_sds.dst_local),
-                        (_rep(mesh), shard0, shard0),
-                        (shard0, shard0), flops, note=f"variant={variant}")
-
-    def run(root, src, dst_local, valid):
-        fn = shard_map(
-            _dist_bfs_local(v_pad, nd, v_loc, gaxes, maxes, hierarchical),
-            mesh=mesh,
-            in_specs=(P(), P(mesh_axes), P(mesh_axes), P(mesh_axes)),
-            out_specs=(P(mesh_axes), P(mesh_axes)),
-            check=False,
-        )
-        parent, level = fn(root, src, dst_local, valid)
-        return parent, level
-
-    return CellPlan(arch, shape, run,
-                    (root, g_sds.src, g_sds.dst_local, g_sds.valid),
-                    (_rep(mesh), shard0, shard0, shard0),
-                    (shard0, shard0), flops)
-
-
-def _dist_bfs_local(v_pad, p, v_loc, gaxes, maxes, hierarchical):
-    import jax.numpy as jnp
-    from jax import lax
-    from repro.comms.hierarchical import hierarchical_all_gather
-    from repro.core.heavy import pack_bitmap
-    from repro.core.bfs_steps import relax_bitmap_local as _local_level
-
-    axes = gaxes + maxes
-
-    def _flat_index(names):
-        idx = jnp.int32(0)
-        for n in names:
-            idx = idx * axis_size(n) + lax.axis_index(n)
-        return idx
-
-    def local_bfs(root, src, dst_local, valid):
-        gi = _flat_index(gaxes)
-        mi = _flat_index(maxes)
-        m = 1
-        for n in maxes:
-            m = m * axis_size(n)
-        dev = gi * m + mi
-        src, dst_local, valid = src[0], dst_local[0], valid[0]
-        parent = jnp.full((v_loc,), v_pad, jnp.int32)
-        is_mine = (root % p) == dev
-        slot = root // p
-        parent = jnp.where((jnp.arange(v_loc) == slot) & is_mine, root, parent)
-        level = jnp.where(parent != v_pad, 0, -1).astype(jnp.int32)
-        newly = parent != v_pad
-
-        def cond(st):
-            return st[3] & (st[4] < 48)
-
-        def body(st):
-            parent, level, newly, _, lvl = st
-            local_bm = pack_bitmap(newly, v_loc // 32)
-            if hierarchical:
-                frontier_bm = hierarchical_all_gather(local_bm, gaxes, maxes)
-            else:
-                frontier_bm = lax.all_gather(local_bm, axes, axis=0, tiled=True)
-            som = (src % p) * v_loc + src // p
-            som = jnp.where(valid, som, p * v_loc)
-            new_parent, won = _local_level(som, dst_local, valid,
-                                           frontier_bm, parent, v_pad)
-            tru = jnp.where(won, (new_parent % v_loc) * p + new_parent // v_loc,
-                            new_parent)
-            parent = jnp.where(won, tru, parent)
-            level = jnp.where(won, lvl, level)
-            any_new = lax.psum(jnp.sum(won.astype(jnp.int32)), axes) > 0
-            return parent, level, won, any_new, lvl + 1
-
-        st = lax.while_loop(cond, body,
-                            (parent, level, newly, jnp.bool_(True), jnp.int32(1)))
-        parent, level = st[0], st[1]
-        return parent[None], level[None]
-
-    return local_bfs
-
-
-def _dist_bfs_local_lean(v_pad, p, v_loc, gaxes, maxes, hierarchical):
-    """Cell-C lean BFS body: 2 edge arrays instead of 3, owner-major src
-    precomputed once on the host (it is loop-invariant)."""
-    import jax.numpy as jnp
-    from jax import lax
-    from repro.comms.hierarchical import hierarchical_all_gather
-    from repro.core.heavy import pack_bitmap
-    from repro.core.bfs_steps import relax_bitmap_local as _local_level
-
-    axes = gaxes + maxes
-
-    def _flat_index(names):
-        idx = jnp.int32(0)
-        for n in names:
-            idx = idx * axis_size(n) + lax.axis_index(n)
-        return idx
-
-    def local_bfs(root, src_om, dst_local):
-        gi = _flat_index(gaxes)
-        mi = _flat_index(maxes)
-        m = 1
-        for n in maxes:
-            m = m * axis_size(n)
-        dev = gi * m + mi
-        src_om, dst_local = src_om[0], dst_local[0]
-        valid = src_om < p * v_loc          # sentinel encodes validity
-        parent = jnp.full((v_loc,), v_pad, jnp.int32)
-        is_mine = (root % p) == dev
-        slot = root // p
-        parent = jnp.where((jnp.arange(v_loc) == slot) & is_mine, root, parent)
-        level = jnp.where(parent != v_pad, 0, -1).astype(jnp.int32)
-        newly = parent != v_pad
-
-        def cond(st):
-            return st[3] & (st[4] < 48)
-
-        def body(st):
-            parent, level, newly, _, lvl = st
-            local_bm = pack_bitmap(newly, v_loc // 32)
-            if hierarchical:
-                frontier_bm = hierarchical_all_gather(local_bm, gaxes, maxes)
-            else:
-                frontier_bm = lax.all_gather(local_bm, axes, axis=0, tiled=True)
-            new_parent, won = _local_level(src_om, dst_local, valid,
-                                           frontier_bm, parent, v_pad)
-            tru = jnp.where(won, (new_parent % v_loc) * p + new_parent // v_loc,
-                            new_parent)
-            parent = jnp.where(won, tru, parent)
-            level = jnp.where(won, lvl, level)
-            any_new = lax.psum(jnp.sum(won.astype(jnp.int32)), axes) > 0
-            return parent, level, won, any_new, lvl + 1
-
-        st = lax.while_loop(cond, body,
-                            (parent, level, newly, jnp.bool_(True), jnp.int32(1)))
-        return st[0][None], st[1][None]
-
-    return local_bfs
+    return CellPlan(arch, shape, step, args, in_sh, out_sh, flops,
+                    note=f"variant={variant};exchange={exchange};"
+                         f"plan=vertex_sharded_program(w_loc={w_loc})")
 
 
 # ---------------------------------------------------------------------------

@@ -21,16 +21,6 @@ def make_host_mesh(shape=(2, 4), axes=("data", "model")):
     return make_mesh(shape, axes)
 
 
-def make_root_mesh(n_devices: int | None = None, axis: str = "root"):
-    """1-D mesh for the root-parallel Graph500 batch (layer 1 sharding).
-
-    The 64 search keys split across ``axis`` with zero communication —
-    defaults to every visible device.
-    """
-    n = n_devices if n_devices is not None else len(jax.devices())
-    return make_mesh((n,), (axis,))
-
-
 def make_group_mesh(shape=None, group_axis: str = "group",
                     member_axis: str = "member"):
     """(group, member) mesh for the vertex-sharded engine (layer 2, T3).

@@ -28,9 +28,16 @@ def axis_size(axis_name) -> int:
     """Version-portable ``lax.axis_size`` (static size of a bound mesh axis).
 
     jax 0.4.x has no ``lax.axis_size``; ``lax.psum(1, axis)`` of a Python
-    constant folds to a concrete int on every version.
+    constant folds to a concrete int on every version.  A tuple of axis
+    names gives the product (the dry-run binds the vertex-sharded
+    engine's group role to several production-mesh axes).
     """
     from jax import lax
+    if isinstance(axis_name, (tuple, list)):
+        n = 1
+        for a in axis_name:
+            n *= axis_size(a)
+        return n
     if hasattr(lax, "axis_size"):
         return lax.axis_size(axis_name)
     return lax.psum(1, axis_name)
