@@ -29,6 +29,13 @@ Env knobs: ``BENCH_SHARDED_SCALE`` (default 14 — the acceptance scale),
 by the root lane count, so the full 64 is a knob, not the default, on
 the interpret-mode container), ``BENCH_RUNGS`` (comma list filtering
 rung names, set by ``benchmarks/run.py --rungs``).
+
+The module payload nests one ladder per scale (``by_scale``) so the
+scale-12 CI smoke and the scale-14 acceptance ladder track side by side
+in BENCH_bfs.json — ``benchmarks/check_regression.py`` gates each scale
+against its own committed baseline.  The extra ``tuned`` rung runs the
+persisted TUNED_PLANS.json winner for (scale, devices, backend) when the
+table has one (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -68,9 +75,13 @@ def _child() -> dict:
     n_vroots = int(os.environ.get("BENCH_SHARDED_VERTEX_ROOTS", "16"))
     reps = int(os.environ.get("BENCH_SHARDED_REPS", "2"))
     want = rung_filter()
+    matched: set = set()
 
     def wanted(name: str) -> bool:
-        return want is None or name in want
+        ok = want is None or name in want
+        if ok:
+            matched.add(name)
+        return ok
 
     edges = generate_edges(1, scale)
     g0 = build_csr(edges)
@@ -94,6 +105,7 @@ def _child() -> dict:
         "root_parallel": {},
         "vertex_sharded": {},
         "composed": {},
+        "tuned": {},
         "mesh_ladder": {},
     }
 
@@ -149,19 +161,11 @@ def _child() -> dict:
         }
 
     def teps_of(res, per_root_s):
-        import jax.numpy as jnp
-        from repro.core import traversed_edges
-        from repro.core.hybrid_bfs import BFSResult
+        from repro.core.teps import batch_harmonic_mean_teps
 
         p = np.asarray(res.parent)
         p = p[:, :V] if p.shape[1] > V else p
-        m = np.asarray(jax.vmap(
-            lambda pp: traversed_edges(
-                g.degree, BFSResult(parent=pp, level=None, stats=None))
-        )(jnp.asarray(p)))
-        t = m / per_root_s
-        t = t[t > 0]
-        return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
+        return batch_harmonic_mean_teps(g.degree, p, per_root_s)
 
     for n_dev in ROOT_SHAPES:
         name = str(n_dev)
@@ -242,39 +246,86 @@ def _child() -> dict:
         print(f"# composed mesh={name}: wall={rung['wall_us']/1e6:.2f}s",
               file=sys.stderr)
 
+    # ---- tuned rung: the persisted TUNED_PLANS.json winner -------------
+    if wanted("tuned"):
+        from repro.core.tune import tuned_plan
+        tp = tuned_plan(scale)
+        if tp is None:
+            note = (
+                f"no TUNED_PLANS.json entry for (scale={scale}, "
+                f"devices={len(jax.devices())}, backend="
+                f"{jax.default_backend()}) — run python -m repro.core.tune")
+            if want is not None:
+                # Explicitly requested via --rungs (the CI smoke): a
+                # missing table entry must fail, not silently pass the
+                # unknown-rung and regression-gate vacuity checks.
+                raise RuntimeError(f"tuned rung requested but {note}")
+            out["tuned_note"] = note
+            print(f"# tuned rung skipped: {note}", file=sys.stderr)
+        else:
+            compiled = compile_plan(tp, pg)
+            t_roots = vroots if "member" in tp.layout else roots
+            res, rung = timed_rung(
+                lambda: compiled.bfs(t_roots), tp, "tuned", "tuned",
+                len(t_roots), check_parent=base_parent(len(t_roots)))
+            rung["harmonic_mean_teps"] = teps_of(res,
+                                                 rung["per_root_us"] / 1e6)
+            if base_per_root:
+                rung["rel_per_root_vs_single"] = (
+                    rung["per_root_us"] / 1e6 / base_per_root)
+            out["tuned"]["tuned"] = rung
+            print(f"# tuned plan={tp.to_dict()}: "
+                  f"wall={rung['wall_us']/1e6:.2f}s", file=sys.stderr)
+
     # ---- acceptance view: one rung per mesh shape ----------------------
-    for src_key in ("root_parallel", "vertex_sharded", "composed"):
+    for src_key in ("root_parallel", "vertex_sharded", "composed", "tuned"):
         for name, rung in out[src_key].items():
             if src_key == "root_parallel" and name not in ("1", "2"):
                 continue
             out["mesh_ladder"][name] = rung
+    out["rungs_matched"] = sorted(matched)
     return out
 
 
-def _merge_unselected_rungs(payload: dict, repo: str) -> None:
-    """Under a BENCH_RUNGS filter, fold the previously tracked rungs of the
-    same scale back into the payload — run.py's module-granularity merge
-    would otherwise drop every rung the filter skipped from
-    BENCH_bfs.json's trajectory.  Rungs measured by THIS run are listed
-    in ``rungs_from_this_run``; a different scale replaces wholesale
-    (mixing scales in one ladder would be worse than dropping rungs)."""
+def _fold_by_scale(payload: dict, repo: str) -> dict:
+    """Nest the child payload under its scale and fold the previously
+    tracked trajectory back in (run.py's module-granularity merge would
+    otherwise drop it): other scales' ladders are always preserved, and
+    under a BENCH_RUNGS filter the same scale's previously tracked rungs
+    survive too.  Rungs measured by THIS run are listed per scale in
+    ``rungs_from_this_run`` — the regression gate compares only those."""
     fresh = sorted(
         set(payload["root_parallel"]) | set(payload["vertex_sharded"])
-        | set(payload["composed"]))
+        | set(payload["composed"]) | set(payload["tuned"]))
     payload["rungs_from_this_run"] = fresh
-    if rung_filter() is None:
-        return
+    scale_key = str(payload["scale"])
     try:
         with open(os.path.join(repo, "BENCH_bfs.json")) as f:
             prev = json.load(f)["modules"]["bfs_sharded"]
     except (OSError, ValueError, KeyError):
-        return
-    if prev.get("scale") != payload["scale"]:
-        return
-    for key in ("root_parallel", "vertex_sharded", "composed", "mesh_ladder"):
-        merged = dict(prev.get(key, {}))
-        merged.update(payload.get(key, {}))
-        payload[key] = merged
+        prev = {}
+    by_scale = dict(prev.get("by_scale", {}))
+    if "by_scale" not in prev and prev.get("scale") is not None:
+        # pre-PR-4 flat layout: keep it as its own scale's ladder
+        by_scale[str(prev["scale"])] = prev
+    if rung_filter() is not None and scale_key in by_scale:
+        old = by_scale[scale_key]
+        for key in ("root_parallel", "vertex_sharded", "composed", "tuned",
+                    "mesh_ladder"):
+            merged = dict(old.get(key, {}))
+            merged.update(payload.get(key, {}))
+            payload[key] = merged
+    by_scale[scale_key] = payload
+    return {"by_scale": by_scale, "latest_scale": payload["scale"]}
+
+
+_SELECTED: set = set()
+
+
+def selected_rungs() -> set:
+    """Rung names this run actually consulted (for run.py's unknown-rung
+    check); filled by :func:`run`."""
+    return set(_SELECTED)
 
 
 def run():
@@ -297,8 +348,9 @@ def run():
     if payload is None:
         raise RuntimeError(f"no payload marker in child stdout:\n"
                            f"{proc.stdout[-2000:]}")
-    _merge_unselected_rungs(payload, repo)
-    _PAYLOAD.update(payload)
+    _SELECTED.clear()
+    _SELECTED.update(payload.get("rungs_matched", []))
+    _PAYLOAD.update(_fold_by_scale(payload, repo))
 
     rows = []
     for name, rung in payload["mesh_ladder"].items():

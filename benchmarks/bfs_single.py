@@ -48,8 +48,29 @@ from repro.kernels.frontier_spmv import core_spmv
 
 _PAYLOAD: dict = {}
 
+_BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_bfs.json")
+
 
 def json_payload() -> dict:
+    """Payload for BENCH_bfs.json: the scales this run measured, plus the
+    previously tracked scales folded back in (run.py's module-granularity
+    merge would otherwise drop them).  ``scales_from_this_run`` marks the
+    fresh ones — the regression gate compares only those."""
+    import json
+
+    fresh = sorted(k for k in _PAYLOAD if k.startswith("scale"))
+    if not fresh:
+        return _PAYLOAD
+    try:
+        with open(_BENCH_JSON) as f:
+            prev = json.load(f)["modules"]["bfs_single"]
+    except (OSError, ValueError, KeyError):
+        prev = {}
+    for k, v in prev.items():
+        if k.startswith("scale") and k not in _PAYLOAD:
+            _PAYLOAD[k] = v
+    _PAYLOAD["scales_from_this_run"] = fresh
     return _PAYLOAD
 
 
@@ -171,8 +192,12 @@ def run():
             f"speedup={speedup:.2f}x;"
             f"chunks_per_level={np.asarray(res_bm.stats.scanned_chunks)[:lv].tolist()};"
             f"total_chunks={int(res_bm.stats.total_chunks)}"))
+        from repro.kernels import ops as kops
         _PAYLOAD[f"scale{scale}"] = {
             "scale": scale,
+            # stamped per payload: run.py merges stale modules wholesale,
+            # so the doc-level interpret_mode only describes the last run
+            "interpret_mode": kops.interpret_mode(),
             "engine": "bitmap",
             "plan": BFSPlan(engine="bitmap", layout=(),
                             batch_roots=False).to_dict(),

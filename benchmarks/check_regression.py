@@ -1,0 +1,190 @@
+"""CI perf-regression gate over the BENCH_bfs.json trajectory.
+
+Usage (the CI legs extract the committed baseline with ``git show``)::
+
+    git show HEAD:BENCH_bfs.json > /tmp/bench_baseline.json
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --baseline /tmp/bench_baseline.json --current BENCH_bfs.json
+
+Compares the *smoke-run* rungs — the modules listed in the current
+file's ``modules_from_this_run`` (and, for ``bfs_sharded``, only the
+rungs in that scale's ``rungs_from_this_run``) — against the committed
+baseline.  A rung pair only gates when its identity matches exactly:
+
+  * rung name (module / scale / layer / rung),
+  * the :class:`repro.core.plan.BFSPlan` dict that produced the number,
+  * interpret mode (a Mosaic-vs-interpret flip is a backend change, not
+    a regression).
+
+Matched pairs fail the job when harmonic-mean TEPS drops by more than
+``--threshold`` (default 0.25, i.e. >25% slowdown).  Zero matched rungs
+is itself a failure: a renamed rung, a changed plan, or an unknown
+``--rungs`` filter must not let the gate pass vacuously.
+
+Caveat: the comparison is *absolute* interpret-mode TEPS, so the
+committed baseline should come from hardware comparable to the CI
+runners — a systematically slower runner fails on machine speed alone.
+If that happens, loosen via the ``REGRESSION_THRESHOLD`` env var (or
+``--threshold``) and re-commit a baseline produced by a CI-artifact
+BENCH_bfs.json so the trajectory is runner-calibrated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 0.25
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def collect_rungs(doc: dict, only_fresh: bool = False) -> dict:
+    """Flatten a BENCH_bfs.json doc into ``name -> (plan, interpret,
+    harmonic_mean_teps)`` for every plan-carrying rung.
+
+    Covered: ``bfs_sharded`` ladder rungs (root_parallel /
+    vertex_sharded / composed / tuned, per scale), ``version_ladder``
+    rungs, and ``bfs_single`` batch64 harnesses.  Engine rows without a
+    plan dict of their own never gate.  ``only_fresh`` restricts to
+    rungs the doc's own run produced (``modules_from_this_run`` +
+    per-scale ``rungs_from_this_run``).
+    """
+    out: dict = {}
+    modules = doc.get("modules", {})
+    fresh_modules = set(doc.get("modules_from_this_run", modules))
+    doc_interp = doc.get("interpret_mode")
+
+    def add(name, rung, teps_key="harmonic_mean_teps", interp=None):
+        plan = rung.get("plan")
+        teps = rung.get(teps_key)
+        if plan is None or teps is None:
+            return
+        out[name] = {
+            "plan": plan,
+            "interpret_mode": doc_interp if interp is None else interp,
+            "teps": float(teps),
+        }
+
+    sharded = modules.get("bfs_sharded", {})
+    if not only_fresh or "bfs_sharded" in fresh_modules:
+        latest = str(sharded.get("latest_scale"))
+        for scale, payload in sharded.get("by_scale", {}).items():
+            # Only the latest run's scale and only its measured rungs
+            # gate — a stale scale's ladder is a copy of the baseline
+            # and would always compare 1.0, defeating the zero-match
+            # vacuity check.
+            if only_fresh and str(scale) != latest:
+                continue
+            fresh = set(payload.get("rungs_from_this_run") or [])
+            interp = payload.get("interpret_mode")
+            for layer in ("root_parallel", "vertex_sharded", "composed",
+                          "tuned"):
+                rungs = payload.get(layer, {})
+                if not isinstance(rungs, dict):
+                    continue
+                for name, rung in rungs.items():
+                    if not isinstance(rung, dict):
+                        continue
+                    if only_fresh and name not in fresh:
+                        continue
+                    add(f"bfs_sharded/scale{scale}/{layer}/{name}", rung,
+                        interp=interp)
+
+    if not only_fresh or "version_ladder" in fresh_modules:
+        ladder = modules.get("version_ladder", {})
+        fresh_rungs = ladder.get("rungs_from_this_run")
+        for name, rung in ladder.items():
+            if not isinstance(rung, dict):
+                continue
+            if (only_fresh and fresh_rungs is not None
+                    and name not in fresh_rungs):
+                continue
+            add(f"version_ladder/{name}", rung,
+                interp=rung.get("interpret_mode"))
+
+    if not only_fresh or "bfs_single" in fresh_modules:
+        single = modules.get("bfs_single", {})
+        fresh_scales = single.get("scales_from_this_run")
+        for scale_key, payload in single.items():
+            if not isinstance(payload, dict):
+                continue
+            if (only_fresh and fresh_scales is not None
+                    and scale_key not in fresh_scales):
+                continue
+            batch = payload.get("batch64")
+            if isinstance(batch, dict) and not batch.get("skipped"):
+                add(f"bfs_single/{scale_key}/batch64", batch,
+                    interp=payload.get("interpret_mode"))
+    return out
+
+
+def compare(baseline: dict, current: dict, threshold: float) -> tuple:
+    """Return (regressions, matched, unmatched) over the flattened rung
+    maps.  A pair matches when name + plan dict + interpret mode agree;
+    it regresses when current TEPS < (1 - threshold) * baseline TEPS."""
+    regressions, matched, unmatched = [], [], []
+    for name, cur in sorted(current.items()):
+        base = baseline.get(name)
+        if (base is None or base["plan"] != cur["plan"]
+                or base["interpret_mode"] != cur["interpret_mode"]):
+            why = ("missing from baseline" if base is None else
+                   "plan dict changed" if base["plan"] != cur["plan"] else
+                   "interpret mode changed")
+            unmatched.append((name, why))
+            continue
+        ratio = cur["teps"] / base["teps"] if base["teps"] > 0 else \
+            float("inf")
+        matched.append((name, ratio))
+        if ratio < 1.0 - threshold:
+            regressions.append((name, ratio, base["teps"], cur["teps"]))
+    return regressions, matched, unmatched
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold harmonic-mean-TEPS slowdown vs "
+                    "the committed BENCH_bfs.json baseline")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_bfs.json (e.g. from `git show`)")
+    ap.add_argument("--current", default="BENCH_bfs.json")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("REGRESSION_THRESHOLD",
+                                                 DEFAULT_THRESHOLD)),
+                    help="fractional slowdown that fails (default 0.25)")
+    ap.add_argument("--all-rungs", action="store_true",
+                    help="gate every rung in the current file, not just "
+                         "the ones this run refreshed")
+    args = ap.parse_args(argv)
+
+    base = collect_rungs(_load(args.baseline))
+    cur = collect_rungs(_load(args.current), only_fresh=not args.all_rungs)
+    regressions, matched, unmatched = compare(base, cur, args.threshold)
+
+    bad = {name for name, *_ in regressions}
+    for name, why in unmatched:
+        print(f"# unmatched (not gated): {name} — {why}")
+    for name, ratio in matched:
+        if name not in bad:
+            print(f"ok {name}: {ratio:.3f}x baseline TEPS")
+    if not matched:
+        print("FAIL: no rung matched the baseline (name + plan dict + "
+              "interpret mode) — the gate would be vacuous", file=sys.stderr)
+        return 1
+    if regressions:
+        for name, ratio, b, c in regressions:
+            print(f"REGRESSION {name}: {b:.3g} -> {c:.3g} TEPS "
+                  f"({ratio:.3f}x, threshold {1 - args.threshold:.2f}x)",
+                  file=sys.stderr)
+        return 1
+    print(f"# gate passed: {len(matched)} rungs within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,16 @@ payloads are written to ``BENCH_bfs.json`` at the repo root (plus run
 metadata) so the perf trajectory is tracked in-tree from PR to PR.  Rung
 entries record the :class:`repro.core.plan.BFSPlan` that produced them
 (as a dict) so every number names the engine configuration it measured.
+
+The merge here is module-granularity (a partial run must not clobber the
+other modules' trajectories); anything finer is module-owned: a module
+whose payload nests partial runs (per scale, per rung) folds the
+previously tracked entries back in itself and marks what THIS run
+measured (``bfs_sharded``: ``by_scale`` + per-scale
+``rungs_from_this_run``; ``bfs_single``: ``scales_from_this_run``) —
+``benchmarks/check_regression.py`` gates only those fresh markers.
+Rung-aware modules also expose ``selected_rungs()`` so an unknown
+``--rungs`` name is an error, not an empty run.
 """
 from __future__ import annotations
 
@@ -105,6 +115,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     payloads = {}
+    selected_rungs: set = set()
     for name in want:
         t0 = time.time()
         try:
@@ -116,12 +127,23 @@ def main() -> None:
                 payload = mod.json_payload()
                 if payload:
                     payloads[name] = payload
+            if hasattr(mod, "selected_rungs"):
+                selected_rungs |= set(mod.selected_rungs())
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures.append(name)
             print(f"# {name} FAILED:", flush=True)
             traceback.print_exc()
     _write_json(payloads)
+    if args.rungs and not failures:
+        # An unknown rung name must be an error, not an empty filter that
+        # runs nothing and exits 0 — the CI perf gate would pass vacuously.
+        requested = {r.strip() for r in args.rungs.split(",") if r.strip()}
+        unknown = requested - selected_rungs
+        if unknown:
+            sys.exit(f"--rungs names matched no rung in the selected "
+                     f"modules: {sorted(unknown)} (rungs that ran: "
+                     f"{sorted(selected_rungs)})")
     if failures:
         sys.exit(f"benchmark modules failed: {failures}")
 

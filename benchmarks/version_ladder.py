@@ -14,6 +14,8 @@ when both of their rungs ran.  ``json_payload()`` records each rung's
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from benchmarks.common import FAST, row, rung_filter
@@ -25,8 +27,30 @@ RUNGS = ("reference-3.0.0", "th2", "k",
 
 _PAYLOAD: dict = {}
 
+_BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_bfs.json")
+
 
 def json_payload() -> dict:
+    """Payload for BENCH_bfs.json: the rungs this run measured, plus the
+    previously tracked rungs folded back in (run.py's module-granularity
+    merge would otherwise drop every rung a --rungs filter skipped).
+    ``rungs_from_this_run`` marks the fresh ones — the regression gate
+    compares only those."""
+    import json
+
+    fresh = sorted(k for k in _PAYLOAD if k in RUNGS)
+    if not fresh:
+        return _PAYLOAD
+    try:
+        with open(_BENCH_JSON) as f:
+            prev = json.load(f)["modules"]["version_ladder"]
+    except (OSError, ValueError, KeyError):
+        prev = {}
+    for k, v in prev.items():
+        if k in RUNGS and k not in _PAYLOAD and isinstance(v, dict):
+            _PAYLOAD[k] = v
+    _PAYLOAD["rungs_from_this_run"] = fresh
     return _PAYLOAD
 
 
@@ -37,11 +61,21 @@ def _wanted():
     return [r for r in RUNGS if r in want]
 
 
+_SELECTED: set = set()
+
+
+def selected_rungs() -> set:
+    """Rung names this run executed (run.py's unknown-rung check)."""
+    return set(_SELECTED)
+
+
 def run():
     rows = []
     scale = 10 if FAST else 12
     teps = {}
     rungs = _wanted()
+    _SELECTED.clear()
+    _SELECTED.update(rungs)
     for rung in rungs:
         cfg = Graph500Config.ladder(rung, scale=scale, n_roots=2)
         built, result = run_g500(cfg)
@@ -59,9 +93,13 @@ def run():
             f"ladder/{rung}", result.mean_time_s * 1e6,
             f"GTEPS={teps[rung] / 1e9:.5f};scanned_edges={scanned};"
             f"work_ratio={scanned / max(2 * m, 1):.2f};valid={result.all_valid}"))
+        from repro.kernels import ops as kops
         _PAYLOAD[rung] = {
             "plan": plan.to_dict(),
             "scale": scale,
+            # per-rung stamp: the doc-level interpret_mode describes only
+            # the run that last rewrote BENCH_bfs.json
+            "interpret_mode": kops.interpret_mode(),
             "harmonic_mean_teps": teps[rung],
             "mean_time_us": result.mean_time_s * 1e6,
             "scanned_edges": scanned,

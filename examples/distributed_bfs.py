@@ -64,4 +64,18 @@ print(f"composed 2x2x2 plan: bitwise_identical={ok} "
       f"valid={result.run.all_valid} mesh={compiled.mesh_axes} "
       f"hmean_TEPS={result.run.harmonic_mean_teps:.3g}")
 assert ok and result.run.all_valid
+
+# auto-tuned plan (DESIGN.md §11): the persisted TUNED_PLANS.json winner
+# for (scale=12, 8 devices, cpu) — swept, parity-checked and recorded by
+# `python -m repro.core.tune`; consumed here exactly like a hand-written
+# plan.  Explicit fields still override (demonstrated via overrides=).
+from repro.core.tune import tuned_plan
+
+tp = tuned_plan(12)
+assert tp is not None, "TUNED_PLANS.json has no (scale12, dev8, cpu) entry"
+res_t = compile_plan(tp, pg).bfs(roots)
+ok = np.array_equal(np.asarray(res_t.parent)[:, :V], base_parent)
+print(f"tuned plan layout={tp.layout} mesh={tp.mesh_shape} "
+      f"exchange={tp.exchange}: bitwise_identical={ok}")
+assert ok
 print("OK")

@@ -23,6 +23,19 @@ from repro.core.plan import (
 )
 from repro.core.pipeline import Graph500Config, build, run
 
+# Tuner exports resolve lazily: `python -m repro.core.tune` must be able
+# to execute the module as __main__ without this package import having
+# already registered it in sys.modules (runpy warns otherwise).
+_TUNE_EXPORTS = ("TuneReport", "TuneResult", "enumerate_plans",
+                 "load_table", "save_tuned", "sweep", "tuned_plan")
+
+
+def __getattr__(name):
+    if name in _TUNE_EXPORTS:
+        from repro.core import tune
+        return getattr(tune, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "EdgeList", "generate_edges", "sample_roots",
     "CSRGraph", "build_csr",
@@ -35,5 +48,7 @@ __all__ = [
     "run_graph500_sharded", "traversed_edges",
     "BFSPlan", "CompiledBFS", "Graph500Result", "PreparedGraph",
     "compile_plan",
+    "TuneReport", "TuneResult", "enumerate_plans", "load_table",
+    "save_tuned", "sweep", "tuned_plan",
     "Graph500Config", "build", "run",
 ]

@@ -65,6 +65,13 @@ class Graph500Config:
     layout: Optional[tuple] = None
     mesh_shape: Optional[tuple] = None
     exchange: str = "hier_or"
+    # Auto-tuned plan (DESIGN.md §11): start from the TUNED_PLANS.json
+    # winner for (scale, visible devices, backend).  An explicit
+    # layout / mesh_shape / root_devices bypasses the table entirely;
+    # non-default engine/exchange/alpha/beta knobs override those fields
+    # on the tuned plan; with no matching entry the config falls back to
+    # the untuned derivation.
+    tuned: bool = False
 
     @staticmethod
     def ladder(rung: str, **kw) -> "Graph500Config":
@@ -91,11 +98,37 @@ class Graph500Config:
             "pre-g500-mesh3": dict(degree_sort=True, heavy_threshold=100,
                                    engine="bitmap", batched=True,
                                    layout=("root", "group", "member")),
+            # auto-tuned rung: the TUNED_PLANS.json winner for this
+            # (scale, devices, backend), untuned pre-g500-batch when the
+            # table has no matching entry.
+            "pre-g500-tuned": dict(degree_sort=True, heavy_threshold=100,
+                                   engine="bitmap", batched=True,
+                                   tuned=True),
         }
         return Graph500Config(**{**presets[rung], **kw})
 
     def to_plan(self) -> BFSPlan:
-        """Lower the config knobs onto the declarative plan axes."""
+        """Lower the config knobs onto the declarative plan axes.
+
+        With ``tuned=True`` the plan starts from the TUNED_PLANS.json
+        winner: any explicit layout / mesh_shape / root_devices bypasses
+        the table entirely, non-default engine/exchange/alpha/beta knobs
+        replace those fields, and the table's ``batch_roots`` is kept
+        (tuned winners are batched plans).
+        """
+        if (self.tuned and self.layout is None and self.mesh_shape is None
+                and self.root_devices is None):
+            from repro.core.tune import tuned_plan
+
+            defaults = Graph500Config()
+            overrides = {
+                f: getattr(self, f)
+                for f in ("engine", "exchange", "alpha", "beta")
+                if getattr(self, f) != getattr(defaults, f)
+            }
+            base = tuned_plan(self.scale, overrides=overrides)
+            if base is not None:
+                return base
         if self.layout is not None:
             layout, mesh_shape = tuple(self.layout), self.mesh_shape
         elif self.root_devices is not None:

@@ -139,6 +139,18 @@ class BFSPlan:
                            if self.mesh_shape is not None else None)
         return d
 
+    @staticmethod
+    def from_dict(d: dict) -> "BFSPlan":
+        """Inverse of :meth:`to_dict` (TUNED_PLANS.json / BENCH_bfs.json
+        rung metadata back to a spec).  Unknown keys are rejected so a
+        table written by a future plan schema fails loudly."""
+        fields = {f.name for f in dataclasses.fields(BFSPlan)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown BFSPlan fields {sorted(unknown)}; "
+                             f"expected a subset of {sorted(fields)}")
+        return BFSPlan(**d)
+
 
 @dataclass
 class PreparedGraph:

@@ -35,6 +35,20 @@ def traversed_edges(degree: jax.Array, result: BFSResult) -> jax.Array:
     return jnp.sum(jnp.where(visited, degree, 0)) // 2
 
 
+def batch_harmonic_mean_teps(degree, parents, per_root_s: float) -> float:
+    """Harmonic-mean TEPS of a ``[R, V]`` parent batch at a uniform
+    per-root wall time (the fused-batch accounting of DESIGN.md §8) —
+    the one copy shared by the plan tuner and the sharded benchmark
+    ladder."""
+    m = np.asarray(jax.vmap(
+        lambda p: traversed_edges(
+            degree, BFSResult(parent=p, level=None, stats=None))
+    )(jnp.asarray(parents)))
+    t = m / per_root_s
+    t = t[t > 0]
+    return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
+
+
 @dataclass
 class Graph500Run:
     teps: list[float] = field(default_factory=list)

@@ -537,7 +537,10 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
 
     ``variant``: ``baseline`` lowers ``exchange="hier_or"`` (the T3
     two-phase OR); ``gather*`` the hierarchical all-gather; ``*flat*``
-    the flat ablation.
+    the flat ablation; ``tuned`` the exchange the plan auto-tuner
+    persisted in TUNED_PLANS.json (nearest tuned scale — the 256/512-chip
+    meshes are never tuned directly; DESIGN.md §11), falling back to
+    ``hier_or`` when no table exists.
     """
     from repro.core.bfs_steps import DEFAULT_CHUNKS
     from repro.core.heavy import padded_bitmap_words
@@ -565,10 +568,15 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
     shard0 = NamedSharding(mesh, P(mesh_axes))
     rep = _rep(mesh)
 
+    exchange_src = ""
     if "flat" in variant:
         exchange = "flat"
     elif "gather" in variant:
         exchange = "hier_gather"
+    elif variant == "tuned":
+        from repro.core.tune import tuned_exchange
+        exchange, src = tuned_exchange(scale, nd)
+        exchange_src = f";exchange_source={src}"
     else:
         exchange = "hier_or"
 
@@ -592,7 +600,8 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
     out_sh = (shard0, shard0, rep)
     flops = 2.0 * e_directed  # semiring "flops": one AND+OR per edge/level-ish
     return CellPlan(arch, shape, step, args, in_sh, out_sh, flops,
-                    note=f"variant={variant};exchange={exchange};"
+                    note=f"variant={variant};exchange={exchange}"
+                         f"{exchange_src};"
                          f"plan=vertex_sharded_program(w_loc={w_loc})")
 
 

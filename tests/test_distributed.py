@@ -61,10 +61,11 @@ print("OK")
 
 def test_distributed_bfs_matches_host_reference():
     out = run_sub(PREAMBLE + """
-from repro.core import generate_edges, build_csr, degree_reorder
+from repro.core import (BFSPlan, PreparedGraph, compile_plan,
+                        generate_edges, build_csr, degree_reorder)
 from repro.core.reorder import relabel_edges
 from repro.core.graph_build import csr_to_edge_arrays
-from repro.core.distributed_bfs import shard_graph, make_dist_bfs, gather_result
+from repro.core.distributed_bfs import shard_graph
 from repro.core.reference import reference_bfs
 edges = generate_edges(5, 9)
 g0 = build_csr(edges)
@@ -73,12 +74,15 @@ g = build_csr(relabel_edges(edges, r))
 src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
 sg = shard_graph(src, dst, valid, g.num_vertices, 8)
 ro, ci = np.asarray(g.row_offsets), np.asarray(g.col_indices)
-for hier in (True, False):
-    bfs = make_dist_bfs(mesh, sg, hierarchical=hier)
+for exchange in ("hier_or", "flat"):
+    plan = BFSPlan(layout=("group", "member"), exchange=exchange,
+                   batch_roots=False)
+    compiled = compile_plan(plan, PreparedGraph(sharded=sg, degree=g.degree),
+                            mesh=mesh)
     for root in (0, 5):
-        p, l = gather_result(bfs(jnp.int32(root)), sg)
+        l = np.asarray(compiled.bfs(root).level)
         pr, lr = reference_bfs(ro, ci, root)
-        assert np.array_equal(l[:g.num_vertices], lr), (hier, root)
+        assert np.array_equal(l[:g.num_vertices], lr), (exchange, root)
 print("OK")
 """)
     assert "OK" in out

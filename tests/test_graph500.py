@@ -6,11 +6,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    Graph500Config, bfs_batch, build, build_csr, build_heavy_core,
-    chunk_edge_view, degree_reorder, edge_view, generate_edges, hybrid_bfs,
-    pack_bitmap, run, sample_roots, unpack_bitmap, validate,
+    BFSPlan, Graph500Config, PreparedGraph, build, build_csr,
+    build_heavy_core, chunk_edge_view, compile_plan, degree_reorder,
+    edge_view, generate_edges, pack_bitmap, run, sample_roots,
+    unpack_bitmap, validate,
 )
-from repro.core.teps import run_graph500_batched
 from repro.core.graph_build import csr_to_edge_arrays
 from repro.core.heavy import heavy_count
 from repro.core.heavy import testbit as bit_at  # alias: pytest must not collect
@@ -24,6 +24,26 @@ def small_graph():
     edges = generate_edges(3, 10)
     g = build_csr(edges)
     return edges, g
+
+
+# hybrid_bfs / bfs_batch-shaped conveniences routed through the plan API
+# (the deprecated shims themselves are exercised in tests/test_plan.py;
+# DeprecationWarnings from repro.* are errors under this suite's
+# filterwarnings config).
+
+def plan_bfs(ev, degree, root, *, core=None, engine="reference",
+             alpha=14.0, beta=24.0, max_levels=64, chunks=None,
+             n_chunks=64):
+    p = BFSPlan(engine=engine, layout=(), batch_roots=False, alpha=alpha,
+                beta=beta, max_levels=max_levels, n_chunks=n_chunks)
+    return compile_plan(p, PreparedGraph(
+        ev=ev, degree=degree, core=core, chunks=chunks)).bfs(root)
+
+
+def plan_batch(ev, degree, roots, *, core=None, chunks=None):
+    p = BFSPlan(layout=(), batch_roots=True)
+    return compile_plan(p, PreparedGraph(
+        ev=ev, degree=degree, core=core, chunks=chunks)).bfs(roots)
 
 
 def test_kronecker_shapes_and_determinism():
@@ -150,7 +170,7 @@ def test_hybrid_bfs_matches_host_oracle(engine, threshold, scale):
     ev = edge_view(g)
     ro, ci = np.asarray(g.row_offsets), np.asarray(g.col_indices)
     for root in (0, 3, 17):
-        res = hybrid_bfs(ev, g.degree, root, core=core, engine=engine)
+        res = plan_bfs(ev, g.degree, root, core=core, engine=engine)
         _, l_ref = reference_bfs(ro, ci, root)
         np.testing.assert_array_equal(np.asarray(res.level), l_ref,
                                       err_msg=f"root={root}")
@@ -164,7 +184,7 @@ def test_hybrid_switches_direction():
     r = degree_reorder(g0.degree)
     g = build_csr(relabel_edges(edges, r))
     ev = edge_view(g)
-    res = hybrid_bfs(ev, g.degree, 0, alpha=14.0, beta=24.0)
+    res = plan_bfs(ev, g.degree, 0, alpha=14.0, beta=24.0)
     dirs = np.asarray(res.stats.direction)[: int(res.stats.levels)]
     assert 0 in dirs and 1 in dirs, dirs  # both directions used
 
@@ -173,7 +193,7 @@ def test_validation_catches_corruption():
     edges = generate_edges(13, 8)
     g = build_csr(edges)
     ev = edge_view(g)
-    res = hybrid_bfs(ev, g.degree, 1)
+    res = plan_bfs(ev, g.degree, 1)
     ok = validate(ev, res, jnp.int32(1))
     assert bool(ok.ok)
     # corrupt: point a visited vertex at a non-neighbor
@@ -204,7 +224,7 @@ def test_traversed_edges_counts_component():
     edges = generate_edges(17, 9)
     g = build_csr(edges)
     ev = edge_view(g)
-    res = hybrid_bfs(ev, g.degree, int(np.asarray(sample_roots(0, edges, 1))[0]))
+    res = plan_bfs(ev, g.degree, int(np.asarray(sample_roots(0, edges, 1))[0]))
     m = int(traversed_edges(g.degree, res))
     assert 0 < m <= int(g.nnz) // 2
 
@@ -229,8 +249,8 @@ def test_bitmap_engine_byte_identical_to_reference(scale):
     g, ev, core, chunks = _sorted_graph(scale, threshold=threshold)
     roots = (0, 17) if scale == 12 else (0,)
     for root in roots:
-        ref = hybrid_bfs(ev, g.degree, root, engine="reference")
-        res = hybrid_bfs(ev, g.degree, root, core=core, engine="bitmap",
+        ref = plan_bfs(ev, g.degree, root, engine="reference")
+        res = plan_bfs(ev, g.degree, root, core=core, engine="bitmap",
                          chunks=chunks)
         np.testing.assert_array_equal(
             np.asarray(res.parent), np.asarray(ref.parent),
@@ -260,11 +280,11 @@ def test_bitmap_engine_never_packs_inside_loop(monkeypatch):
 
     monkeypatch.setattr(hb, "pack_bitmap", counting)
     # unusual max_levels forces a fresh trace while the counter is active
-    res = hybrid_bfs(ev, g.degree, 0, core=core, engine="bitmap",
+    res = plan_bfs(ev, g.degree, 0, core=core, engine="bitmap",
                      chunks=chunks, max_levels=61)
     assert bool(validate(ev, res, jnp.int32(0)).ok)
     assert len(calls) == 0, "bitmap engine packed inside the loop"
-    hybrid_bfs(ev, g.degree, 0, core=core, engine="legacy", max_levels=61)
+    plan_bfs(ev, g.degree, 0, core=core, engine="legacy", max_levels=61)
     assert len(calls) > 0, "instrumentation dead — counter never fired"
 
 
@@ -272,7 +292,7 @@ def test_chunked_top_down_skips_work():
     """Small-frontier top-down levels must touch < 25% of edge chunks on a
     degree-sorted graph (frontier-proportional scanning)."""
     g, ev, core, chunks = _sorted_graph(12)
-    res = hybrid_bfs(ev, g.degree, 0, core=core, engine="bitmap",
+    res = plan_bfs(ev, g.degree, 0, core=core, engine="bitmap",
                      chunks=chunks)
     lv = int(res.stats.levels)
     dirs = np.asarray(res.stats.direction)[:lv]
@@ -289,9 +309,9 @@ def test_chunked_top_down_skips_work():
 def test_bfs_batch_matches_single_runs():
     g, ev, core, chunks = _sorted_graph(10)
     roots = np.asarray([0, 3, 17, 29], np.int32)
-    batched = bfs_batch(ev, g.degree, roots, core=core, chunks=chunks)
+    batched = plan_batch(ev, g.degree, roots, core=core, chunks=chunks)
     for i, root in enumerate(roots):
-        single = hybrid_bfs(ev, g.degree, int(root), core=core,
+        single = plan_bfs(ev, g.degree, int(root), core=core,
                             engine="bitmap", chunks=chunks)
         np.testing.assert_array_equal(
             np.asarray(batched.parent[i]), np.asarray(single.parent))
@@ -304,17 +324,17 @@ def test_bfs_batch_64_roots_one_jit():
     """Graph500-spec batch width: all 64 search keys in a single program."""
     g, ev, core, chunks = _sorted_graph(9, threshold=8)
     roots = np.arange(64, dtype=np.int32)  # heaviest 64 ids: degree >= 1
-    res = bfs_batch(ev, g.degree, roots, core=core, chunks=chunks)
+    res = plan_batch(ev, g.degree, roots, core=core, chunks=chunks)
     assert res.parent.shape == (64, g.num_vertices)
     assert res.level.shape == (64, g.num_vertices)
     for i in (0, 31, 63):  # spot-check against single runs
-        single = hybrid_bfs(ev, g.degree, int(roots[i]), core=core,
+        single = plan_bfs(ev, g.degree, int(roots[i]), core=core,
                             engine="bitmap", chunks=chunks)
         np.testing.assert_array_equal(
             np.asarray(res.parent[i]), np.asarray(single.parent))
 
 
-def test_run_graph500_batched_reports_harmonic_mean():
+def test_batched_runner_reports_harmonic_mean():
     edges = generate_edges(11, 10)
     g0 = build_csr(edges)
     r = degree_reorder(g0.degree)
@@ -322,7 +342,9 @@ def test_run_graph500_batched_reports_harmonic_mean():
     core = build_heavy_core(g, threshold=32)
     ev = edge_view(g)
     roots = np.asarray(r.new_from_old)[np.asarray(sample_roots(3, edges, 8))]
-    g500 = run_graph500_batched(ev, g.degree, roots, core=core)
+    g500 = compile_plan(
+        BFSPlan(layout=(), batch_roots=True),
+        PreparedGraph(ev=ev, degree=g.degree, core=core)).run(roots).run
     assert g500.batched
     assert len(g500.teps) == len(roots)
     assert g500.all_valid

@@ -31,9 +31,9 @@ def run_sub(code: str, extra_env: dict | None = None) -> str:
 PREAMBLE = """
 import numpy as np
 import jax, jax.numpy as jnp
-from repro.core import (build_csr, build_heavy_core, chunk_edge_view,
-                        degree_reorder, edge_view, generate_edges,
-                        hybrid_bfs, bfs_batch)
+from repro.core import (BFSPlan, PreparedGraph, build_csr, build_heavy_core,
+                        chunk_edge_view, compile_plan, degree_reorder,
+                        edge_view, generate_edges)
 from repro.core.graph_build import csr_to_edge_arrays
 from repro.core.reorder import relabel_edges
 from repro.util import make_mesh
@@ -46,28 +46,46 @@ def sorted_graph(scale, seed=11, threshold=32):
     core = build_heavy_core(g, threshold=threshold)
     ev = edge_view(g)
     return g, ev, core, chunk_edge_view(ev)
+
+# plan-API conveniences (the deprecated shims these tests used to route
+# through are exercised in tests/test_plan.py)
+
+def plan_bfs(ev, degree, root, *, core=None, chunks=None):
+    p = BFSPlan(engine="bitmap", layout=(), batch_roots=False)
+    return compile_plan(p, PreparedGraph(ev=ev, degree=degree, core=core,
+                                         chunks=chunks)).bfs(root)
+
+def plan_batch(ev, degree, roots, *, core=None, chunks=None):
+    p = BFSPlan(layout=(), batch_roots=True)
+    return compile_plan(p, PreparedGraph(ev=ev, degree=degree, core=core,
+                                         chunks=chunks)).bfs(roots)
+
+def vertex_plan(mesh, sg, *, core=None, degree=None, ev=None,
+                exchange="hier_or", batched=False):
+    p = BFSPlan(layout=("group", "member"), exchange=exchange,
+                batch_roots=batched)
+    return compile_plan(p, PreparedGraph(ev=ev, degree=degree, core=core,
+                                         sharded=sg), mesh=mesh)
 """
 
 
 def test_root_parallel_batch_bitwise_identical_to_single_device():
-    """Acceptance: bfs_batch_sharded on a 4-device mesh == bfs_batch for
-    all 64 roots, bitwise."""
+    """Acceptance: the ("root",) plan on a 4-device mesh == the
+    single-device batch plan for all 64 roots, bitwise."""
     out = run_sub(PREAMBLE + """
-from repro.core import bfs_batch_sharded
 g, ev, core, chunks = sorted_graph(10, seed=1, threshold=8)
 roots = np.arange(64, dtype=np.int32)
-base = bfs_batch(ev, g.degree, roots, core=core, chunks=chunks)
+base = plan_batch(ev, g.degree, roots, core=core, chunks=chunks)
+pg = PreparedGraph(ev=ev, degree=g.degree, core=core, chunks=chunks)
 mesh = make_mesh((4,), ("root",))
-res = bfs_batch_sharded(ev, g.degree, roots, mesh=mesh, core=core,
-                        chunks=chunks)
+res = compile_plan(BFSPlan(layout=("root",)), pg, mesh=mesh).bfs(roots)
 assert np.array_equal(np.asarray(res.parent), np.asarray(base.parent))
 assert np.array_equal(np.asarray(res.level), np.asarray(base.level))
 assert np.array_equal(np.asarray(res.stats.levels),
                       np.asarray(base.stats.levels))
 # root count not a multiple of the axis: padded and sliced
-res10 = bfs_batch_sharded(ev, g.degree, roots[:10],
-                          mesh=make_mesh((8,), ("root",)),
-                          core=core, chunks=chunks)
+res10 = compile_plan(BFSPlan(layout=("root",)), pg,
+                     mesh=make_mesh((8,), ("root",))).bfs(roots[:10])
 assert res10.parent.shape[0] == 10
 assert np.array_equal(np.asarray(res10.parent),
                       np.asarray(base.parent)[:10])
@@ -81,19 +99,18 @@ def test_vertex_sharded_equals_single_device_scale12(shape):
     """Satellite: parents/levels identical on host meshes of 1, 2, 4 and
     8 devices at scale 12 (dense core on)."""
     out = run_sub(PREAMBLE + f"""
-from repro.core.distributed_bfs import shard_graph, make_dist_bfs, gather_result
+from repro.core.distributed_bfs import shard_graph
 shape = {shape!r}
 g, ev, core, chunks = sorted_graph(12, seed=11, threshold=32)
 src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
 p = shape[0] * shape[1]
 sg = shard_graph(src, dst, valid, g.num_vertices, p)
 mesh = make_mesh(shape, ("group", "member"))
-bfs = make_dist_bfs(mesh, sg, core=core)
+compiled = vertex_plan(mesh, sg, core=core)
 for root in (0, 17):
-    res = bfs(jnp.int32(root))
-    parent, level = gather_result(res, sg)
-    single = hybrid_bfs(ev, g.degree, root, core=core, engine="bitmap",
-                        chunks=chunks)
+    res = compiled.bfs(root)
+    parent, level = np.asarray(res.parent), np.asarray(res.level)
+    single = plan_bfs(ev, g.degree, root, core=core, chunks=chunks)
     V = g.num_vertices
     assert np.array_equal(parent[:V], np.asarray(single.parent)), root
     assert np.array_equal(level[:V], np.asarray(single.level)), root
@@ -107,7 +124,7 @@ def test_vertex_sharded_nonmultiple_word_count():
     """Satellite: word counts that do NOT divide n_devices (3 and 5
     shards over a 1024-word bitmap) exercise the padded tail path."""
     out = run_sub(PREAMBLE + """
-from repro.core.distributed_bfs import shard_graph, make_dist_bfs, gather_result
+from repro.core.distributed_bfs import shard_graph
 from repro.core.heavy import padded_bitmap_words
 g, ev, core, chunks = sorted_graph(12, seed=11, threshold=32)
 src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
@@ -117,12 +134,11 @@ for shape in ((3, 1), (1, 5)):
     assert w_base % p != 0, (w_base, p)   # the case under test
     sg = shard_graph(src, dst, valid, g.num_vertices, p)
     assert sg.num_vertices > g.num_vertices  # padded tail exists
+    # non-pow2 members are allowed through a caller-supplied mesh=
     mesh = make_mesh(shape, ("group", "member"))
-    bfs = make_dist_bfs(mesh, sg, core=core)
-    res = bfs(jnp.int32(0))
-    parent, level = gather_result(res, sg)
-    single = hybrid_bfs(ev, g.degree, 0, core=core, engine="bitmap",
-                        chunks=chunks)
+    res = vertex_plan(mesh, sg, core=core).bfs(0)
+    parent, level = np.asarray(res.parent), np.asarray(res.level)
+    single = plan_bfs(ev, g.degree, 0, core=core, chunks=chunks)
     V = g.num_vertices
     assert np.array_equal(parent[:V], np.asarray(single.parent)), shape
     assert np.array_equal(level[:V], np.asarray(single.level)), shape
@@ -136,6 +152,7 @@ def test_exchange_wirings_bit_identical():
     """hier_or (two-phase OR reduction), hier_gather (monitor all-gather)
     and flat all-gather must produce the same traversal."""
     out = run_sub(PREAMBLE + """
+import warnings
 from repro.core.distributed_bfs import shard_graph, make_dist_bfs, gather_result
 g, ev, core, chunks = sorted_graph(10, seed=3, threshold=8)
 src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
@@ -143,15 +160,17 @@ sg = shard_graph(src, dst, valid, g.num_vertices, 8)
 mesh = make_mesh((2, 4), ("group", "member"))
 results = {}
 for exch in ("hier_or", "hier_gather", "flat"):
-    bfs = make_dist_bfs(mesh, sg, exchange=exch, core=core)
-    res = bfs(jnp.int32(5))
-    results[exch] = gather_result(res, sg)
+    res = vertex_plan(mesh, sg, core=core, exchange=exch).bfs(5)
+    results[exch] = (np.asarray(res.parent), np.asarray(res.level))
 ref_p, ref_l = results["hier_or"]
 for exch, (p, l) in results.items():
     assert np.array_equal(p, ref_p), exch
     assert np.array_equal(l, ref_l), exch
-# legacy-compat flag still routes: hierarchical=False -> flat
-bfs = make_dist_bfs(mesh, sg, hierarchical=False, core=core)
+# legacy-compat flag still routes: hierarchical=False -> flat (the one
+# intentional shim call here; its DeprecationWarning is acknowledged)
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    bfs = make_dist_bfs(mesh, sg, hierarchical=False, core=core)
 p, l = gather_result(bfs(jnp.int32(5)), sg)
 assert np.array_equal(p, ref_p)
 print("OK")
@@ -163,15 +182,14 @@ def test_vertex_sharded_batched_roots():
     """Layer composition: all search keys batched inside the vertex-sharded
     SPMD program (vmap over roots under shard_map)."""
     out = run_sub(PREAMBLE + """
-from repro.core.distributed_bfs import shard_graph, make_dist_bfs
+from repro.core.distributed_bfs import shard_graph
 g, ev, core, chunks = sorted_graph(9, seed=5, threshold=8)
 src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
 roots = np.asarray([0, 3, 17, 29, 40, 41, 42, 43], np.int32)
-base = bfs_batch(ev, g.degree, roots, core=core, chunks=chunks)
+base = plan_batch(ev, g.degree, roots, core=core, chunks=chunks)
 sg = shard_graph(src, dst, valid, g.num_vertices, 8)
 mesh = make_mesh((2, 4), ("group", "member"))
-bfs = make_dist_bfs(mesh, sg, core=core, batched=True)
-res = bfs(jnp.asarray(roots))
+res = vertex_plan(mesh, sg, core=core, batched=True).bfs(roots)
 V = g.num_vertices
 assert np.array_equal(np.asarray(res.parent)[:, :V], np.asarray(base.parent))
 assert np.array_equal(np.asarray(res.level)[:, :V], np.asarray(base.level))
@@ -180,9 +198,9 @@ print("OK")
     assert "OK" in out
 
 
-def test_run_graph500_sharded_harness():
+def test_vertex_sharded_runner_harness():
     out = run_sub(PREAMBLE + """
-from repro.core import run_graph500_sharded, sample_roots
+from repro.core import sample_roots
 from repro.core.distributed_bfs import shard_graph
 edges = generate_edges(7, 10)
 g0 = build_csr(edges)
@@ -194,13 +212,15 @@ ev = edge_view(g)
 roots = np.asarray(r.new_from_old)[np.asarray(sample_roots(3, edges, 8))]
 sg = shard_graph(src, dst, valid, g.num_vertices, 8)
 mesh = make_mesh((2, 4), ("group", "member"))
-run = run_graph500_sharded(mesh, sg, g.degree, roots, core=core, ev=ev)
+run = vertex_plan(mesh, sg, core=core, degree=g.degree, ev=ev,
+                  batched=True).run(roots).run
 assert run.batched and len(run.teps) == len(roots)
 assert run.harmonic_mean_teps > 0
 assert all(m > 0 for m in run.edges)
 assert len(run.validated) == len(roots) and run.all_valid
 # without ev there is nothing to validate -> all_valid must NOT be True
-run2 = run_graph500_sharded(mesh, sg, g.degree, roots[:2], core=core)
+run2 = vertex_plan(mesh, sg, core=core, degree=g.degree,
+                   batched=True).run(roots[:2]).run
 assert not run2.all_valid and run2.harmonic_mean_teps > 0
 print("OK")
 """)
