@@ -12,7 +12,12 @@ XLA:CPU; relative rungs, not absolute GTEPS, are the tracked numbers):
   * vertex-sharded  — ``BFSPlan(layout=("group", "member"))`` over
     meshes 2x1 / 2x2 / 4x2: one giant traversal spans the mesh, the
     per-level delta bitmaps combine through the T3 two-phase bitwise-OR
-    collective (``exchange="hier_or"``).
+    collective (``exchange="hier_or"``).  Each mesh runs under BOTH
+    vertex partitions — ``block`` (the plain ``2x2`` rung names) and
+    ``word_cyclic`` (paper eq. (3); ``2x2_cyc``) — and every vertex
+    rung records the per-shard edge-count skew (``edge_skew``:
+    max / mean / max_over_mean of the dst-owner counts, the padding
+    overhead the block layout pays after the degree sort).
   * composed        — ``BFSPlan(layout=("root", "group", "member"))``
     over the 2x2x2 mesh: the root batch splits over its own mesh axis
     OUTSIDE the vertex-sharded SPMD program (layer 1 x layer 2).
@@ -199,26 +204,34 @@ def _child() -> dict:
     # all visible devices (member sized to the router group) rides along
     # as its own rung so the eq.-5-derived shape is measured, not assumed.
     from repro.comms.topology import plan_device_mesh
+    from repro.core.distributed_bfs import shard_edge_skew
     planned = plan_device_mesh(len(jax.devices()))
     shapes = list(VERTEX_SHAPES)
     if planned not in shapes:
         shapes.append(planned)
     out["planned_shape"] = f"{planned[0]}x{planned[1]}"
     vroots = roots[:n_vroots]
-    for shape in shapes:
-        name = f"{shape[0]}x{shape[1]}"
+    # both partitions cover the same shape set — including the planner's
+    # eq.-5 shape, so the block-vs-cyclic skew comparison exists for it
+    cases = ([(s, "block") for s in shapes]
+             + [(s, "word_cyclic") for s in shapes])
+    for shape, partition in cases:
+        name = (f"{shape[0]}x{shape[1]}"
+                + ("_cyc" if partition == "word_cyclic" else ""))
         if not wanted(name):
             continue
         plan = BFSPlan(layout=("group", "member"), mesh_shape=shape,
-                       exchange="hier_or")
+                       exchange="hier_or", partition=partition)
         compiled = compile_plan(plan, pg)    # shards the graph internally
+        skew = shard_edge_skew(compiled.graph.sharded)
         result = compiled.run(vroots)
         run = result.run
         if not run.all_valid:
             raise AssertionError(
-                f"vertex-sharded mesh={shape}: spec validation failed")
+                f"vertex-sharded mesh={shape} partition={partition}: "
+                f"spec validation failed")
         out["vertex_sharded"][name] = {
-            "mesh": name,
+            "mesh": f"{shape[0]}x{shape[1]}",
             "layer": "vertex_sharded",
             "plan": plan.to_dict(),
             "wall_us": float(np.sum(run.times_s)) * 1e6,
@@ -226,9 +239,11 @@ def _child() -> dict:
             "harmonic_mean_teps": run.harmonic_mean_teps,
             "n_roots": len(vroots),
             "validated": run.all_valid,
+            "edge_skew": skew,
         }
         print(f"# vertex_sharded mesh={name}: "
-              f"wall={float(np.sum(run.times_s)):.2f}s", file=sys.stderr)
+              f"wall={float(np.sum(run.times_s)):.2f}s "
+              f"skew={skew['max_over_mean']:.2f}", file=sys.stderr)
 
     # ---- composed 3-axis ladder (layer 1 x layer 2) --------------------
     for shape in COMPOSED_SHAPES:

@@ -21,6 +21,13 @@ Matched pairs fail the job when harmonic-mean TEPS drops by more than
 is itself a failure: a renamed rung, a changed plan, or an unknown
 ``--rungs`` filter must not let the gate pass vacuously.
 
+Plan dicts are compared after **default-filling**: a baseline recorded
+before a :class:`repro.core.plan.BFSPlan` field existed (e.g. the v2
+``partition`` axis) still matches a current rung that carries the
+field at its default value — adding a plan axis must not zero-match
+every committed baseline.  A field present on BOTH sides with
+different values still mismatches.
+
 Caveat: the comparison is *absolute* interpret-mode TEPS, so the
 committed baseline should come from hardware comparable to the CI
 runners — a systematically slower runner fails on machine speed alone.
@@ -41,6 +48,20 @@ DEFAULT_THRESHOLD = 0.25
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def _plan_defaults() -> dict:
+    """The current BFSPlan's field defaults (single source of truth for
+    the default-fill — never a copy hardcoded here)."""
+    from repro.core.plan import BFSPlan
+
+    return BFSPlan().to_dict()
+
+
+def normalize_plan(plan: dict, defaults: dict | None = None) -> dict:
+    """Fill fields the rung's plan dict predates with their defaults, so
+    old baselines keep matching when the plan schema grows a field."""
+    return {**(_plan_defaults() if defaults is None else defaults), **plan}
 
 
 def collect_rungs(doc: dict, only_fresh: bool = False) -> dict:
@@ -125,15 +146,20 @@ def collect_rungs(doc: dict, only_fresh: bool = False) -> dict:
 
 def compare(baseline: dict, current: dict, threshold: float) -> tuple:
     """Return (regressions, matched, unmatched) over the flattened rung
-    maps.  A pair matches when name + plan dict + interpret mode agree;
-    it regresses when current TEPS < (1 - threshold) * baseline TEPS."""
+    maps.  A pair matches when name + default-filled plan dict +
+    interpret mode agree; it regresses when current TEPS <
+    (1 - threshold) * baseline TEPS."""
+    defaults = _plan_defaults()
     regressions, matched, unmatched = [], [], []
     for name, cur in sorted(current.items()):
         base = baseline.get(name)
-        if (base is None or base["plan"] != cur["plan"]
+        plans_differ = base is not None and (
+            normalize_plan(base["plan"], defaults)
+            != normalize_plan(cur["plan"], defaults))
+        if (base is None or plans_differ
                 or base["interpret_mode"] != cur["interpret_mode"]):
             why = ("missing from baseline" if base is None else
-                   "plan dict changed" if base["plan"] != cur["plan"] else
+                   "plan dict changed" if plans_differ else
                    "interpret mode changed")
             unmatched.append((name, why))
             continue

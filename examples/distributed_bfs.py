@@ -55,6 +55,25 @@ for exchange in ("hier_or", "hier_gather", "flat"):
           f"bitwise_identical={ok}")
     assert ok, exchange
 
+# the word-cyclic partition (paper eq. (3) at uint32-word granularity):
+# the degree-sorted heavy words interleave round-robin across shards
+# instead of piling onto shard 0; parents land back in global vertex
+# order through the inverse reassembly permutation, still bitwise
+# identical to the single-device engine.
+from repro.core.distributed_bfs import shard_edge_skew
+
+for partition in ("block", "word_cyclic"):
+    plan = BFSPlan(layout=("group", "member"), mesh_shape=(2, 4),
+                   partition=partition)
+    compiled = compile_plan(plan, pg)
+    skew = shard_edge_skew(compiled.graph.sharded)
+    res = compiled.bfs(roots)
+    ok = np.array_equal(np.asarray(res.parent)[:, :V], base_parent)
+    print(f"vertex-sharded 2x4 partition={partition:11s}: "
+          f"bitwise_identical={ok} "
+          f"edge_skew_max_over_mean={skew['max_over_mean']:.2f}")
+    assert ok, partition
+
 # layer 1 x layer 2 composed: 2x2x2 — roots split over their own axis
 plan = BFSPlan(layout=("root", "group", "member"), mesh_shape=(2, 2, 2))
 compiled = compile_plan(plan, pg)

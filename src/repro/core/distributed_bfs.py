@@ -9,16 +9,23 @@ translation on every edge every level); that loop is retired — the
 resident engine keeps all state packed across the whole traversal and
 the per-level exchange is the bitwise-OR two-phase monitor collective.
 
-Partitioning (paper §4.2, adapted): vertex ownership is by contiguous
-*bitmap-word blocks* — device ``d`` (flat group-major mesh index) owns
-words ``[d*W_loc, (d+1)*W_loc)``, i.e. vertices
-``[d*W_loc*32, (d+1)*W_loc*32)`` — so the reduce-scatter shard of the
-two-phase collective IS the owner's resident block, and gathering
-shard results back into global vertex order is a concatenation.  (The
-paper's cyclic ``owner(v) = v % P`` balances heavy vertices instead;
-with word-granular bitmaps the block layout is what keeps the exchange
-and the residency aligned, and the chunked frontier-proportional
-top-down absorbs most of the skew.  See DESIGN.md §9.)
+Partitioning (paper §4.2): TWO word-granular vertex ownership maps,
+selected by the plan's ``partition`` axis (DESIGN.md §9):
+
+  * ``"block"``       — device ``d`` (flat group-major mesh index) owns
+    the contiguous words ``[d*W_loc, (d+1)*W_loc)``, i.e. vertices
+    ``[d*W_loc*32, (d+1)*W_loc*32)``.  The reduce-scatter shard of the
+    two-phase collective IS the owner's resident block and global
+    reassembly is a concatenation — but after the T2a degree sort the
+    heavy prefix lands entirely on shard 0.
+  * ``"word_cyclic"`` — the paper's eq. (3) cyclic ``owner(v) = v % P``
+    lifted to uint32-word granularity: device ``d`` owns words
+    ``{w : w % P == d}`` (local word ``j`` is global word ``d + j*P``).
+    Heavy words interleave round-robin across shards, so the
+    degree-sorted prefix (and the dense-core rows inside it) load-
+    balances while packed-word arithmetic and the I3 delta pack stay
+    untouched.  Global reassembly applies the inverse word permutation
+    (:func:`partition_permutation`, one gather at traversal exit).
 
 Edges are partitioned by **destination owner** (bottom-up orientation:
 each device relaxes the edges pointing at its own vertices) and kept
@@ -49,13 +56,17 @@ from repro.core.heavy import HeavyCore, padded_bitmap_words
 from repro.core.hybrid_bfs import MAX_LEVELS
 from repro.util import pytree_dataclass
 
+PARTITIONS = ("block", "word_cyclic")
+
 
 @pytree_dataclass(meta=("num_vertices", "v_orig", "n_devices", "n_chunks",
-                        "chunk_size", "w_loc"))
+                        "chunk_size", "w_loc", "partition"))
 class ShardedGraph:
-    """Dst-owned, per-shard-chunked edge partition (block vertex ownership).
+    """Dst-owned, per-shard-chunked edge partition.
 
-    ``num_vertices`` is the padded global count ``P * W_loc * 32``; ids in
+    ``partition`` names the word-granular vertex ownership map (block vs
+    word-cyclic, see the module docstring).  ``num_vertices`` is the
+    padded global count ``P * W_loc * 32``; ids in
     ``[v_orig, num_vertices)`` never appear in edges and stay unvisited.
     """
 
@@ -72,14 +83,74 @@ class ShardedGraph:
     n_chunks: int
     chunk_size: int
     w_loc: int               # bitmap words owned per device
+    partition: str = "block"
+
+
+def owner_local_of(v, n_devices: int, w_loc: int, partition: str):
+    """(owner, local slot) of global vertex ids ``v`` under ``partition``.
+
+    Pure integer arithmetic shared by the host partitioner, the inverse
+    reassembly permutation, and the tests — works on numpy or jnp arrays.
+    Block: ``owner = v // V_loc``; word-cyclic (paper eq. (3) at uint32-word
+    granularity): ``owner = (v // 32) % P``, local word ``(v // 32) // P``.
+    """
+    if partition not in PARTITIONS:
+        raise ValueError(
+            f"unknown partition {partition!r}; expected one of {PARTITIONS}")
+    v_loc = w_loc * 32
+    if partition == "block":
+        owner = v // v_loc
+        return owner, v - owner * v_loc
+    word = v // 32
+    return word % n_devices, (word // n_devices) * 32 + v % 32
+
+
+def partition_permutation(n_devices: int, w_loc: int,
+                          partition: str) -> "np.ndarray":
+    """Gather indices restoring global vertex order from the shard-major
+    concatenation of per-shard outputs.
+
+    ``concat[owner(g) * V_loc + local(g)]`` holds vertex ``g``, so
+    ``concat[perm]`` is in global order with ``perm[g] = owner(g) * V_loc
+    + local(g)``.  Identity for the block partition (reassembly is a
+    concatenation there); a strided word permutation for word-cyclic.
+    """
+    import numpy as np
+
+    g = np.arange(n_devices * w_loc * 32, dtype=np.int32)
+    owner, local = owner_local_of(g, n_devices, w_loc, partition)
+    return (owner * (w_loc * 32) + local).astype(np.int32)
+
+
+def shard_edge_skew(sg: ShardedGraph) -> dict:
+    """Per-shard edge-count balance metric recorded in BENCH rung
+    metadata: ``max_over_mean`` is 1.0 for a perfectly balanced partition
+    and grows with the heavy-prefix skew the block layout suffers after
+    the degree sort (the padded edge width is ``counts.max()``, so this
+    ratio IS the padding overhead of the light shards)."""
+    import numpy as np
+
+    counts = np.asarray(sg.valid).sum(axis=(1, 2))
+    mean = float(counts.mean()) if counts.size else 0.0
+    return {
+        "per_shard_edges": [int(c) for c in counts],
+        "max": int(counts.max()) if counts.size else 0,
+        "mean": mean,
+        "max_over_mean": float(counts.max() / mean) if mean else 0.0,
+    }
 
 
 def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
-                n_chunks: int = DEFAULT_CHUNKS) -> ShardedGraph:
-    """Host-side partitioner: block word ownership, dst-owner edge split,
-    per-shard src-sorted chunks with source ranges."""
+                n_chunks: int = DEFAULT_CHUNKS,
+                partition: str = "block") -> ShardedGraph:
+    """Host-side partitioner: word-granular vertex ownership (``block`` or
+    ``word_cyclic``), dst-owner edge split, per-shard src-sorted chunks
+    with source ranges."""
     import numpy as np
 
+    if partition not in PARTITIONS:
+        raise ValueError(
+            f"unknown partition {partition!r}; expected one of {PARTITIONS}")
     p = n_devices
     w_base = padded_bitmap_words(num_vertices)
     w_loc = -(-w_base // p)
@@ -88,7 +159,8 @@ def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
     src = np.asarray(src)
     dst = np.asarray(dst)
     valid = np.asarray(valid)
-    owner = np.where(valid, dst // v_loc, p)
+    dst_owner, dst_slot = owner_local_of(dst, p, w_loc, partition)
+    owner = np.where(valid, dst_owner, p)
     counts = np.bincount(owner[valid], minlength=p)[:p]
     e_loc = int(counts.max()) if counts.size else 1
     chunk_size = max(128, -(-e_loc // n_chunks))
@@ -103,8 +175,11 @@ def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
         # csr_to_edge_arrays emits (src, dst)-sorted edges; the boolean
         # select preserves that order, so each shard's slice stays
         # src-sorted and contiguous chunks cover contiguous src bands.
+        # Padding is a contiguous per-shard TAIL: all-invalid chunks
+        # carry the sentinels src_lo = v_pad, src_hi = -1, so live
+        # chunks form a prefix (the engine's BU scan stops there).
         s[pe, :k] = src[sel]
-        dl[pe, :k] = dst[sel] - pe * v_loc
+        dl[pe, :k] = dst_slot[sel]
         va[pe, :k] = True
     s = s.reshape(p, n_chunks, chunk_size)
     dl = dl.reshape(p, n_chunks, chunk_size)
@@ -113,14 +188,20 @@ def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
     src_hi = np.where(va, s, -1).max(axis=2).astype(np.int32)
 
     deg = np.zeros((p, v_loc), np.int32)
-    np.add.at(deg, (owner[valid], dst[valid] % v_loc), 1)
-    n_active = int((np.bincount(dst[valid], minlength=num_vertices) > 0).sum())
+    np.add.at(deg, (owner[valid], dst_slot[valid]), 1)
+    # Non-isolated count over BOTH endpoints: a vertex with only outgoing
+    # edges has no dst entry but still participates in the traversal (the
+    # single-device engines count it via degree > 0, and the eq. (1)/(2)
+    # direction switch diverges if the shards disagree on |V_active|).
+    ends = np.concatenate([src[valid], dst[valid]])
+    n_active = int((np.bincount(ends, minlength=num_vertices) > 0).sum())
     return ShardedGraph(
         src=jnp.asarray(s), dst_local=jnp.asarray(dl), valid=jnp.asarray(va),
         src_lo=jnp.asarray(src_lo), src_hi=jnp.asarray(src_hi),
         degree_local=jnp.asarray(deg), n_active=jnp.int32(n_active),
         num_vertices=v_pad, v_orig=num_vertices, n_devices=p,
         n_chunks=n_chunks, chunk_size=chunk_size, w_loc=w_loc,
+        partition=partition,
     )
 
 
@@ -169,7 +250,8 @@ def make_dist_bfs(
         exchange = "hier_or" if hierarchical else "flat"
     p = plan_api.BFSPlan(engine="bitmap", layout=("group", "member"),
                          exchange=exchange, alpha=alpha, beta=beta,
-                         max_levels=max_levels, batch_roots=batched)
+                         max_levels=max_levels, batch_roots=batched,
+                         partition=g.partition)
     compiled = plan_api.compile_plan(
         p, plan_api.PreparedGraph(core=core, sharded=g),
         mesh=mesh, axis_names=(group_axis, member_axis))
@@ -184,9 +266,9 @@ def make_dist_bfs(
 def gather_result(res: DistBFSResult, g: ShardedGraph):
     """Global (parent, level) in vertex order.
 
-    Block ownership makes this a no-op reassembly: shard outputs
-    concatenate directly into global vertex order (the retired cyclic
-    layout needed a strided scatter here).
+    A no-op for BOTH partitions: the plan runner already applies
+    :func:`partition_permutation` at traversal exit (word-cyclic), and
+    block shard outputs concatenate directly into global vertex order.
     """
     import numpy as np
 

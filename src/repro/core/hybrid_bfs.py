@@ -599,10 +599,12 @@ def bfs_batch_sharded(
 # ---------------------------------------------------------------------------
 # Layer 2 — vertex-sharded resident bitmaps (DESIGN.md §9, paper T3).
 #
-# One giant traversal spans a (group, member) mesh.  Ownership is by
-# contiguous BITMAP-WORD blocks: device d (flat index, group-major) owns
-# words [d*W_loc, (d+1)*W_loc) == vertices [d*W_loc*32, (d+1)*W_loc*32).
-# Each shard holds:
+# One giant traversal spans a (group, member) mesh.  Ownership is
+# word-granular under one of two maps (the plan's `partition` axis):
+# contiguous BLOCKS — device d (flat index, group-major) owns words
+# [d*W_loc, (d+1)*W_loc) — or WORD-CYCLIC (paper eq. (3) at uint32-word
+# granularity) — device d owns words {w : w % P == d}, interleaving the
+# degree-sorted heavy prefix evenly across shards.  Each shard holds:
 #   * parent/level/visited for its owned vertices only (resident, packed);
 #   * the edge chunks whose DESTINATION it owns (bottom-up orientation,
 #     paper §4.2 — each device relaxes the edges pointing at its own
@@ -641,15 +643,21 @@ def _shard_index(group_axis, member_axis):
 
 
 def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
-                    group_axis, member_axis):
+                    group_axis, member_axis, partition="block"):
     """Combine per-shard delta words into the full next-frontier bitmap.
 
-    Delta bits live only in the owner's word block (dst-owned edges find
-    owned vertices), so OR-combining the blocks reassembles the global
-    frontier exactly.  Three wirings, all bit-identical:
+    Delta bits live only in the owner's words (dst-owned edges find owned
+    vertices), so OR-combining the shards' words reassembles the global
+    frontier exactly.  The exchange must follow the owner map
+    (``partition``): under ``block`` ownership shard ``d``'s local word
+    ``j`` is global word ``d*W_loc + j`` — exactly the device-major block
+    order the gather collectives emit; under ``word_cyclic`` it is global
+    word ``d + j*P``, so the OR-scatter is strided and the gathered
+    device-major blocks transpose into word order.  Three wirings, all
+    bit-identical:
 
-      * ``hier_or``     — scatter the block into a zero full-width vector
-        and run the T3 two-phase bitwise-OR reduction
+      * ``hier_or``     — scatter the owned words into a zero full-width
+        vector and run the T3 two-phase bitwise-OR reduction
         (:func:`~repro.comms.hierarchical.hierarchical_por`).  This is the
         general form: it stays correct if a future edge partition lets
         shards produce overlapping deltas.
@@ -664,15 +672,31 @@ def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
 
     axes = _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis)
     if exchange == "hier_or":
-        full = jnp.zeros((n_dev * w_loc,), jnp.uint32)
-        full = jax.lax.dynamic_update_slice(full, delta_loc, (dev * w_loc,))
+        if partition == "word_cyclic":
+            # global word j*P + d <-> matrix slot [j, d]: placing the
+            # owned words in column `dev` of a [W_loc, P] zero matrix is
+            # the strided owner scatter, row-major flatten restores word
+            # order.
+            full = jnp.where(
+                jnp.arange(n_dev, dtype=jnp.int32)[None, :] == dev,
+                delta_loc[:, None], jnp.uint32(0)).reshape(-1)
+        else:
+            full = jnp.zeros((n_dev * w_loc,), jnp.uint32)
+            full = jax.lax.dynamic_update_slice(full, delta_loc,
+                                                (dev * w_loc,))
         return hierarchical_por(full, group_axis, member_axis)
     if exchange == "hier_gather":
-        return hierarchical_all_gather(delta_loc, group_axis, member_axis)
-    if exchange == "flat":
-        return jax.lax.all_gather(delta_loc, axes, axis=0, tiled=True)
-    raise ValueError(
-        f"unknown exchange {exchange!r}; expected one of {SHARD_EXCHANGES}")
+        out = hierarchical_all_gather(delta_loc, group_axis, member_axis)
+    elif exchange == "flat":
+        out = jax.lax.all_gather(delta_loc, axes, axis=0, tiled=True)
+    else:
+        raise ValueError(
+            f"unknown exchange {exchange!r}; expected one of "
+            f"{SHARD_EXCHANGES}")
+    if partition == "word_cyclic":
+        # gathered blocks are device-major [d, j]; word order is [j, d].
+        out = out.reshape(n_dev, w_loc).T.reshape(-1)
+    return out
 
 
 class _ShardState(NamedTuple):
@@ -729,16 +753,26 @@ def _run_bitmap_sharded(
     group_axis: str = "group",
     member_axis: str = "member",
     exchange: str = "hier_or",
+    partition: str = "block",
 ) -> BFSResult:
     """Vertex-sharded bitmap-resident BFS — runs INSIDE ``shard_map``.
 
     The sharded sibling of :func:`_run_bitmap_impl`: same invariants
-    (I1–I4, DESIGN.md §3) with residency per owned word block and one
-    hierarchical delta exchange per level (DESIGN.md §9).  Returns the
-    shard's slice of the result (parent/level for owned vertices) plus
-    replicated stats; parents are bitwise-identical to the single-device
-    engine.
+    (I1–I4, DESIGN.md §3) with residency per owned word set and one
+    hierarchical delta exchange per level (DESIGN.md §9).  ``partition``
+    selects the word-granular owner map — contiguous ``block`` or the
+    paper's eq.-(3) ``word_cyclic`` (device ``d`` owns words
+    ``{w : w % P == d}``); all global↔local id arithmetic below goes
+    through it.  Returns the shard's slice of the result (parent/level
+    for owned vertices, shard-major — the plan runner restores global
+    vertex order) plus replicated stats; parents are bitwise-identical
+    to the single-device engine.
     """
+    # Deferred import: distributed_bfs imports this module at load time,
+    # but the owner-map arithmetic must stay ONE copy (shared with the
+    # host partitioner and the reassembly permutation).
+    from repro.core.distributed_bfs import owner_local_of
+
     axes = _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis)
     v_loc = w_loc * 32
     v_pad = n_dev * v_loc          # sentinel (padded global vertex count)
@@ -746,10 +780,23 @@ def _run_bitmap_sharded(
     n_chunks = src.shape[0]
     dev = _shard_index(group_axis, member_axis)
     start = dev * v_loc
+    cyclic = partition == "word_cyclic"
+
+    def to_local(ids):
+        """(is_mine, local slot) of global vertex ids on this shard."""
+        owner, local = owner_local_of(ids, n_dev, w_loc, partition)
+        return owner == dev, local
+
+    def to_global(slots_loc):
+        """Global vertex id of local slots on this shard (inverse of
+        ``to_local`` for owned ids — it is parameterized by ``dev``, so
+        it lives here rather than in ``owner_local_of``)."""
+        if cyclic:
+            return (dev + (slots_loc // 32) * n_dev) * 32 + slots_loc % 32
+        return slots_loc + start
 
     # --- init: the root bit is set once; owner holds parent/level/visited.
-    root_slot = root - start
-    is_mine = (root >= start) & (root < start + v_loc)
+    is_mine, root_slot = to_local(root)
     slots = jnp.arange(v_loc, dtype=jnp.int32)
     parent_loc = jnp.where((slots == root_slot) & is_mine, root,
                            jnp.int32(v_pad))
@@ -771,28 +818,29 @@ def _run_bitmap_sharded(
                   0).astype(jnp.int32), axes)
     nnz_total = jax.lax.psum(jnp.sum(degree_loc).astype(jnp.int32), axes)
 
-    # Flat views for bottom-up (nothing to skip when the frontier is big);
-    # the dense core covers (src < K) & (dst < K), so shards whose range
-    # intersects the core drop those edges from their tail.
-    src_flat = src.reshape(-1)
-    dst_flat = dst_loc.reshape(-1)
+    # Bottom-up scans the owned chunks front-to-back; the dense core
+    # covers (src < K) & (dst < K), so shards owning core rows drop those
+    # edges from their tail.  Shard padding is a contiguous per-chunk
+    # tail (shard_graph), so the all-invalid chunks (sentinel
+    # src_hi = -1) form a suffix: BU relaxes only the live prefix — a
+    # light shard of a skewed partition never scans its pure-padding
+    # chunks (the chunk_range_mask kills the same chunks in TD).
     if use_core:
-        dst_global = dst_loc + start
-        tail_flat = (valid
-                     & ~((src < core.k) & (dst_global < core.k))
-                     ).reshape(-1)
+        dst_global = to_global(dst_loc)
+        tail = valid & ~((src < core.k) & (dst_global < core.k))
     else:
-        tail_flat = valid.reshape(-1)
+        tail = valid
+    n_live_chunks = jnp.sum(src_hi >= 0).astype(jnp.int32)
 
     def core_step(frontier, visited, parent):
         """Dense-core bottom-up: full-core SpMV (replicated work), winners
-        applied to owned rows only."""
+        applied to owned rows only (round-robin across shards under the
+        word-cyclic partition — the heavy rows split P ways)."""
         k = core.k
         spmv = kops.core_spmv if use_pallas_core else core_spmv_ref
         cand = spmv(core.a_core, frontier[: k // 32])
         rows = jnp.arange(k, dtype=jnp.int32)
-        rloc = rows - start
-        owned = (rloc >= 0) & (rloc < v_loc)
+        owned, rloc = to_local(rows)
         rloc_c = jnp.clip(rloc, 0, v_loc - 1)
         won = (cand < BIG) & owned & ~testbit(visited, rloc_c)
         tgt = jnp.where(won, rloc_c, v_loc)
@@ -829,10 +877,20 @@ def _run_bitmap_sharded(
         def bu(_):
             p1 = (core_step(s.frontier_bm, s.visited_loc, s.parent_loc)
                   if use_core else s.parent_loc)
-            p2 = _relax_owned_edges(
-                src_flat, dst_flat, tail_flat, s.frontier_bm, s.visited_loc,
-                p1, v_loc, v_pad)
-            return p2, jnp.int32(n_chunks)
+
+            def body(c, p):
+                sc = jax.lax.dynamic_index_in_dim(src, c, 0, keepdims=False)
+                dc = jax.lax.dynamic_index_in_dim(dst_loc, c, 0,
+                                                  keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(tail, c, 0, keepdims=False)
+                return _relax_owned_edges(
+                    sc, dc, vc, s.frontier_bm, s.visited_loc, p, v_loc, v_pad)
+
+            # Only the live-chunk prefix: BU frontiers are large so there
+            # is nothing for *frontier*-range skipping to win, but a light
+            # shard's padding suffix is dead for every frontier.
+            p2 = jax.lax.fori_loop(0, n_live_chunks, body, p1)
+            return p2, n_live_chunks
 
         def td(_):
             return chunked_td(s.frontier_bm, s.visited_loc, s.parent_loc)
@@ -845,7 +903,8 @@ def _run_bitmap_sharded(
         delta_loc = _pack_delta_words(newly, w_loc)
         next_bm = _exchange_delta(
             delta_loc, dev, w_loc, n_dev, exchange=exchange,
-            group_axis=group_axis, member_axis=member_axis)
+            group_axis=group_axis, member_axis=member_axis,
+            partition=partition)
         in_count = jnp.sum(popcount_u32(next_bm)).astype(jnp.int32)
         if w_loc % WORDS_PER_TILE == 0:
             _, new_visited_loc, _ = kops.frontier_update(

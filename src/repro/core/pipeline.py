@@ -65,6 +65,11 @@ class Graph500Config:
     layout: Optional[tuple] = None
     mesh_shape: Optional[tuple] = None
     exchange: str = "hier_or"
+    # Vertex-ownership map of the sharded engine (DESIGN.md §9):
+    # "block" contiguous words, "word_cyclic" the paper's eq.-(3) cyclic
+    # ownership at word granularity.  Only meaningful on vertex-sharded
+    # layouts (a 'member' axis).
+    partition: str = "block"
     # Auto-tuned plan (DESIGN.md §11): start from the TUNED_PLANS.json
     # winner for (scale, visible devices, backend).  An explicit
     # layout / mesh_shape / root_devices bypasses the table entirely;
@@ -123,7 +128,7 @@ class Graph500Config:
             defaults = Graph500Config()
             overrides = {
                 f: getattr(self, f)
-                for f in ("engine", "exchange", "alpha", "beta")
+                for f in ("engine", "exchange", "partition", "alpha", "beta")
                 if getattr(self, f) != getattr(defaults, f)
             }
             base = tuned_plan(self.scale, overrides=overrides)
@@ -143,7 +148,8 @@ class Graph500Config:
             layout, mesh_shape = (), None
         return BFSPlan(
             engine=self.engine, layout=layout, mesh_shape=mesh_shape,
-            exchange=self.exchange, alpha=self.alpha, beta=self.beta,
+            exchange=self.exchange, partition=self.partition,
+            alpha=self.alpha, beta=self.beta,
             batch_roots=self.batched,
         )
 

@@ -65,7 +65,12 @@ from repro.core.bfs_steps import (
     EdgeView,
     chunk_edge_view,
 )
-from repro.core.distributed_bfs import ShardedGraph, shard_graph
+from repro.core.distributed_bfs import (
+    PARTITIONS,
+    ShardedGraph,
+    partition_permutation,
+    shard_graph,
+)
 from repro.core.heavy import HeavyCore
 from repro.core.hybrid_bfs import (
     ENGINES,
@@ -108,6 +113,11 @@ class BFSPlan:
                       devices (the (group, member) split comes from the
                       eq.-5 interconnect model via ``plan_device_mesh``)
       ``exchange``    §4.3 monitor wiring of the per-level delta combine
+      ``partition``   vertex-ownership map of the sharded engine:
+                      ``block`` (contiguous word blocks) vs
+                      ``word_cyclic`` (eq. (3) cyclic ownership at
+                      uint32-word granularity — load-balances the
+                      degree-sorted heavy prefix)
       ``alpha/beta``  eq. (1)/(2) direction-switch thresholds
       ``max_levels``  traversal bound (static loop trip limit)
       ``n_chunks``    frontier-proportional top-down granularity (§3)
@@ -119,6 +129,7 @@ class BFSPlan:
     layout: tuple = ()
     mesh_shape: Optional[tuple] = None
     exchange: str = "hier_or"
+    partition: str = "block"
     alpha: float = 14.0
     beta: float = 24.0
     max_levels: int = MAX_LEVELS
@@ -230,6 +241,15 @@ def validate_plan(plan: BFSPlan) -> None:
         raise ValueError(
             f"unknown exchange {plan.exchange!r}; expected one of "
             f"{SHARD_EXCHANGES}")
+    if plan.partition not in PARTITIONS:
+        raise ValueError(
+            f"unknown partition {plan.partition!r}; expected one of "
+            f"{PARTITIONS}")
+    if plan.partition != "block" and "member" not in plan.layout:
+        raise ValueError(
+            f"partition={plan.partition!r} requires a vertex-sharded "
+            f"layout (a 'member' axis); layout {plan.layout} has no "
+            f"vertex ownership to partition")
     if plan.layout and plan.engine != "bitmap":
         raise ValueError(
             f"mesh layout {plan.layout} requires engine='bitmap' "
@@ -360,12 +380,18 @@ def _prepare(built, plan: BFSPlan, n_dev_vertex: int) -> PreparedGraph:
             pg.sharded = shard_graph(
                 np.asarray(pg.ev.src), np.asarray(pg.ev.dst),
                 np.asarray(pg.ev.valid), pg.ev.num_vertices,
-                n_dev_vertex, plan.n_chunks)
+                n_dev_vertex, plan.n_chunks, partition=plan.partition)
         elif pg.sharded.n_devices != n_dev_vertex:
             raise ValueError(
                 f"ShardedGraph was partitioned for "
                 f"{pg.sharded.n_devices} devices but the plan mesh has "
                 f"{n_dev_vertex} (group x member)")
+        elif pg.sharded.partition != plan.partition:
+            raise ValueError(
+                f"ShardedGraph was partitioned with "
+                f"partition={pg.sharded.partition!r} but the plan says "
+                f"{plan.partition!r} — re-run shard_graph (the owner map "
+                f"is baked into the edge split)")
     else:
         if pg.ev is None:
             raise ValueError("plan needs built.ev (an EdgeView)")
@@ -422,6 +448,7 @@ def vertex_sharded_program(
     member_axis: str = "member",
     root_axis: Optional[str] = None,
     exchange: str = "hier_or",
+    partition: str = "block",
     alpha: float = 14.0,
     beta: float = 24.0,
     use_core: bool = False,
@@ -453,6 +480,7 @@ def vertex_sharded_program(
         alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
         use_pallas_core=use_pallas_core, w_loc=w_loc, n_dev=n_dev,
         group_axis=group_axis, member_axis=member_axis, exchange=exchange,
+        partition=partition,
     )
     vmapped = batched or root_axis is not None
 
@@ -570,15 +598,27 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
             w_loc=sg.w_loc, n_dev=sg.n_devices,
             group_axis=role["group"], member_axis=role["member"],
             root_axis=role.get("root"),
-            exchange=plan.exchange, alpha=plan.alpha, beta=plan.beta,
+            exchange=plan.exchange, partition=plan.partition,
+            alpha=plan.alpha, beta=plan.beta,
             use_core=use_core, max_levels=plan.max_levels,
             use_pallas_core=use_pallas, batched=plan.batch_roots,
         )
         core_args = (pg.core,) if use_core else ()
+        # Reassembly: shard outputs concatenate shard-major; under the
+        # word-cyclic owner map the inverse permutation restores global
+        # vertex order (identity for block, where it is skipped).
+        perm = (jnp.asarray(partition_permutation(
+                    sg.n_devices, sg.w_loc, plan.partition))
+                if plan.partition != "block" else None)
 
         def raw(roots):
-            return fn(roots, sg.src, sg.dst_local, sg.valid, sg.src_lo,
-                      sg.src_hi, sg.degree_local, sg.n_active, *core_args)
+            parent, level, levels = fn(
+                roots, sg.src, sg.dst_local, sg.valid, sg.src_lo,
+                sg.src_hi, sg.degree_local, sg.n_active, *core_args)
+            if perm is not None:
+                parent = jnp.take(parent, perm, axis=-1)
+                level = jnp.take(level, perm, axis=-1)
+            return parent, level, levels
 
         v_orig = sg.v_orig
 

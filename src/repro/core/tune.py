@@ -12,7 +12,9 @@ orthogonal declarative axes, so tuning is a loop over
   1. **enumerate** — :func:`enumerate_plans` builds the candidate set for
      the visible device count under a :class:`TuneBudget` (``small`` /
      ``medium`` / ``full``): layouts × mesh-shape factorizations ×
-     exchange wirings × an α/β grid × ``n_chunks``.
+     exchange wirings × vertex partitions (``block`` / ``word_cyclic``,
+     on vertex-sharded layouts) × an α/β grid × ``n_chunks``
+     (10/160/696 candidates at 8 devices).
   2. **compile**  — each candidate goes through ``compile_plan``; invalid
      combinations (too few devices, planner non-pow2 member, …) raise
      the ValueErrors plan validation already defines and are recorded as
@@ -61,7 +63,10 @@ import numpy as np
 
 from repro.core.plan import BFSPlan, PreparedGraph, compile_plan
 
-SCHEMA_VERSION = 1
+# v2: BFSPlan grew the `partition` axis (block vs word_cyclic vertex
+# ownership of the sharded engine); v1 winners predate it and must be
+# re-swept, not silently reinterpreted.
+SCHEMA_VERSION = 2
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__)))))
@@ -87,6 +92,7 @@ class TuneBudget:
 
     name: str
     exchanges: tuple = ("hier_or",)
+    partitions: tuple = ("block", "word_cyclic")
     alpha_beta: tuple = ((14.0, 24.0),)
     n_chunks: tuple = (64,)
     all_factorizations: bool = False
@@ -155,17 +161,21 @@ def _layout_shapes(n_devices: int, budget: TuneBudget) -> list:
 
 
 def enumerate_plans(n_devices: int, budget: TuneBudget) -> list:
-    """The declarative candidate set: layouts × exchange × α/β ×
-    n_chunks, deduplicated (exchange only varies where a member axis
-    exists — it is dead on single-device and root-parallel layouts)."""
+    """The declarative candidate set: layouts × exchange × partition ×
+    α/β × n_chunks, deduplicated (exchange and partition only vary where
+    a member axis exists — both are dead on single-device and
+    root-parallel layouts, and a non-block partition there is a
+    validation error)."""
     plans: dict = {}
     for (layout, shape) in _layout_shapes(n_devices, budget):
-        exchanges = budget.exchanges if "member" in layout else ("hier_or",)
-        for exchange, (alpha, beta), n_chunks in itertools.product(
-                exchanges, budget.alpha_beta, budget.n_chunks):
+        vertexy = "member" in layout
+        exchanges = budget.exchanges if vertexy else ("hier_or",)
+        partitions = budget.partitions if vertexy else ("block",)
+        for exchange, partition, (alpha, beta), n_chunks in itertools.product(
+                exchanges, partitions, budget.alpha_beta, budget.n_chunks):
             p = BFSPlan(layout=layout, mesh_shape=shape, exchange=exchange,
-                        alpha=alpha, beta=beta, n_chunks=n_chunks,
-                        batch_roots=True)
+                        partition=partition, alpha=alpha, beta=beta,
+                        n_chunks=n_chunks, batch_roots=True)
             plans[p] = None
     return list(plans)
 
@@ -225,7 +235,7 @@ class TuneReport:
                  f"backend={self.backend} budget={self.budget} "
                  f"roots={self.n_roots} reps={self.reps} "
                  f"interpret={self.interpret_mode}",
-                 "rank,layout,mesh,exchange,alpha,beta,n_chunks,"
+                 "rank,layout,mesh,exchange,partition,alpha,beta,n_chunks,"
                  "per_root_us,hmean_teps,rel_vs_best,identical"]
         best = self.results[0].per_root_us if self.results else None
         for i, r in enumerate(self.results):
@@ -233,15 +243,16 @@ class TuneReport:
             mesh = "x".join(map(str, p.mesh_shape)) if p.mesh_shape else "1"
             layout = "*".join(p.layout) if p.layout else "single"
             lines.append(
-                f"{i + 1},{layout},{mesh},{p.exchange},{p.alpha:g},"
-                f"{p.beta:g},{p.n_chunks},{r.per_root_us:.0f},"
+                f"{i + 1},{layout},{mesh},{p.exchange},{p.partition},"
+                f"{p.alpha:g},{p.beta:g},{p.n_chunks},{r.per_root_us:.0f},"
                 f"{r.harmonic_mean_teps:.3g},{r.per_root_us / best:.3f},"
                 f"{r.identical}")
         for r in self.skipped:
             p = r.plan
             mesh = "x".join(map(str, p.mesh_shape)) if p.mesh_shape else "1"
             lines.append(f"-,{'*'.join(p.layout) or 'single'},{mesh},"
-                         f"{p.exchange},,,,{r.status}:{r.reason[:60]},,,")
+                         f"{p.exchange},{p.partition},,,,"
+                         f"{r.status}:{r.reason[:60]},,,")
         return "\n".join(lines)
 
 
@@ -379,9 +390,15 @@ def load_table(path: Optional[str] = None) -> Optional[dict]:
         return None
     got = doc.get("schema_version")
     if got != SCHEMA_VERSION:
+        hint = ("its plans predate the BFSPlan `partition` axis (v2) and "
+                "the sweep must re-rank both partitions"
+                if isinstance(got, int) and got < SCHEMA_VERSION
+                else "it was written by a newer plan schema")
         raise ValueError(
-            f"{path}: schema_version {got!r} != supported {SCHEMA_VERSION} "
-            f"— re-run `python -m repro.core.tune` to regenerate")
+            f"{path}: schema_version {got!r} != supported {SCHEMA_VERSION} — "
+            f"{hint}; delete the file (or entry) and re-run "
+            f"`python -m repro.core.tune --budget small --scale <N> "
+            f"--devices <P>` to regenerate")
     return doc
 
 

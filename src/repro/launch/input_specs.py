@@ -530,10 +530,11 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
     (``("pod", "data")`` on the multi-pod mesh) and the member role on
     ``model``, i.e. the T3 monitor group rides the cheap intra-pod
     links.  Inputs are the ShapeDtypeStructs of a dst-owned
-    ``ShardedGraph`` partition (block word ownership, src-sorted chunks),
-    so the 256/512-chip comms/FLOPs rows model the engine that actually
-    runs (the retired cyclic pack-per-level loop previously modeled here
-    is deleted).
+    ``ShardedGraph`` partition (block word ownership — the word-cyclic
+    owner map has identical shapes and per-level comms volume, so one
+    lowering covers both; src-sorted chunks), so the 256/512-chip
+    comms/FLOPs rows model the engine that actually runs (the retired
+    cyclic pack-per-level loop previously modeled here is deleted).
 
     ``variant``: ``baseline`` lowers ``exchange="hier_or"`` (the T3
     two-phase OR); ``gather*`` the hierarchical all-gather; ``*flat*``

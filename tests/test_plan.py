@@ -89,10 +89,45 @@ def test_plan_to_dict_is_json_ready():
      "not a power of two"),
     (BFSPlan(layout=("root", "group", "member"), mesh_shape=(2, 2, 3)),
      "not a power of two"),
+    (BFSPlan(partition="bogus"), "unknown partition"),
+    (BFSPlan(partition="word_cyclic"), "requires a vertex-sharded"),
+    (BFSPlan(layout=("root",), partition="word_cyclic"),
+     "requires a vertex-sharded"),
 ])
 def test_plan_validation_value_errors(plan, match):
     with pytest.raises(ValueError, match=match):
         validate_plan(plan)
+
+
+def test_from_dict_default_fills_missing_fields_rejects_unknown():
+    """A plan dict recorded before the `partition` axis existed loads
+    with the default (block) — the same default-fill the regression gate
+    uses — while unknown fields still fail loudly."""
+    d = BFSPlan(layout=("group", "member"), mesh_shape=(2, 4)).to_dict()
+    assert d["partition"] == "block"
+    d.pop("partition")
+    assert BFSPlan.from_dict(d).partition == "block"
+    with pytest.raises(ValueError, match="unknown BFSPlan fields"):
+        BFSPlan.from_dict({**d, "partition": "block", "owner_map": "x"})
+
+
+def test_prebuilt_sharded_partition_mismatch_is_clear_value_error():
+    """A ShardedGraph carries its owner map; compiling it under a plan
+    that names the other partition must be a ValueError, not a silent
+    mis-assembled traversal."""
+    import numpy as np
+
+    from repro.core import build_csr, generate_edges
+    from repro.core.distributed_bfs import shard_graph
+    from repro.core.graph_build import csr_to_edge_arrays
+
+    g = build_csr(generate_edges(3, 8))
+    src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
+    sg = shard_graph(src, dst, valid, g.num_vertices, 1, partition="block")
+    plan = BFSPlan(layout=("group", "member"), mesh_shape=(1, 1),
+                   partition="word_cyclic")
+    with pytest.raises(ValueError, match="partition.*re-run shard_graph"):
+        compile_plan(plan, PreparedGraph(sharded=sg, degree=g.degree))
 
 
 def test_axis_names_without_mesh_is_clear_value_error():

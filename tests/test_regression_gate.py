@@ -1,0 +1,100 @@
+"""CI perf-gate plan matching (benchmarks/check_regression.py).
+
+The gate matches rungs on name + plan dict + interpret mode.  Plan
+dicts are compared after default-filling missing fields with the
+current BFSPlan defaults, so growing the plan schema (the v2
+``partition`` axis) does not zero-match every committed baseline —
+while a field present on both sides with different values still
+mismatches (a partition flip IS a plan change).
+"""
+import copy
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import (  # noqa: E402
+    collect_rungs,
+    compare,
+    normalize_plan,
+)
+from repro.core.plan import BFSPlan  # noqa: E402
+
+
+def _doc(plan_dict, teps=1000.0):
+    return {
+        "interpret_mode": True,
+        "modules_from_this_run": ["bfs_sharded"],
+        "modules": {
+            "bfs_sharded": {
+                "latest_scale": 12,
+                "by_scale": {
+                    "12": {
+                        "interpret_mode": True,
+                        "rungs_from_this_run": ["4x2"],
+                        "vertex_sharded": {
+                            "4x2": {
+                                "plan": plan_dict,
+                                "harmonic_mean_teps": teps,
+                            },
+                        },
+                    },
+                },
+            },
+        },
+    }
+
+
+def test_normalize_plan_fills_current_defaults():
+    filled = normalize_plan({"layout": ["group", "member"]})
+    assert filled["partition"] == "block"
+    assert filled["engine"] == "bitmap"
+    # every BFSPlan field is present after the fill
+    assert set(filled) >= set(BFSPlan().to_dict())
+    # an explicit value survives the fill
+    assert normalize_plan({"partition": "word_cyclic"})["partition"] == \
+        "word_cyclic"
+
+
+def test_pre_partition_baseline_still_matches():
+    """A baseline recorded before the partition field existed gates
+    against a current rung carrying partition='block'."""
+    old_plan = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2)).to_dict()
+    old_plan.pop("partition")
+    new_plan = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2)).to_dict()
+    base = collect_rungs(_doc(old_plan, teps=1000.0))
+    cur = collect_rungs(_doc(new_plan, teps=990.0), only_fresh=True)
+    regressions, matched, unmatched = compare(base, cur, 0.25)
+    assert len(matched) == 1 and not unmatched and not regressions
+    # and the threshold still bites on a matched pair
+    cur_slow = collect_rungs(_doc(new_plan, teps=100.0), only_fresh=True)
+    regressions, matched, _ = compare(base, cur_slow, 0.25)
+    assert len(regressions) == 1
+
+
+def test_partition_flip_is_a_plan_change_not_a_match():
+    """Fields present on BOTH sides with different values must not be
+    papered over by the default fill."""
+    block = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2)).to_dict()
+    cyc = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2),
+                  partition="word_cyclic").to_dict()
+    base = collect_rungs(_doc(block))
+    cur = collect_rungs(_doc(cyc), only_fresh=True)
+    regressions, matched, unmatched = compare(base, cur, 0.25)
+    assert not matched and not regressions
+    assert unmatched == [
+        ("bfs_sharded/scale12/vertex_sharded/4x2", "plan dict changed")]
+
+
+def test_old_baseline_vs_old_current_unaffected():
+    """Two pre-partition docs (the committed trajectory before this PR)
+    still compare exactly as before the default fill existed."""
+    plan = BFSPlan(layout=("root",), mesh_shape=(4,)).to_dict()
+    plan.pop("partition")
+    base = collect_rungs(_doc(plan, teps=500.0))
+    cur = collect_rungs(_doc(copy.deepcopy(plan), teps=500.0),
+                        only_fresh=True)
+    _, matched, unmatched = compare(base, cur, 0.25)
+    assert len(matched) == 1 and not unmatched

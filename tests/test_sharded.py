@@ -120,9 +120,151 @@ print("OK")
     assert "OK" in out
 
 
+def test_vertex_sharded_word_cyclic_equals_single_device_scale12():
+    """Tentpole acceptance: the word-cyclic partition (paper eq. (3) at
+    uint32-word granularity) is bitwise-identical to the single-device
+    bitmap engine at scale 12 on 2-, 4- and 8-device meshes — the
+    reassembly permutation restores global vertex order exactly."""
+    out = run_sub(PREAMBLE + """
+g, ev, core, chunks = sorted_graph(12, seed=11, threshold=32)
+pg = PreparedGraph(ev=ev, degree=g.degree, core=core, chunks=chunks)
+V = g.num_vertices
+for shape in ((2, 1), (2, 2), (4, 2)):
+    plan = BFSPlan(layout=("group", "member"), mesh_shape=shape,
+                   partition="word_cyclic", batch_roots=False)
+    compiled = compile_plan(plan, pg)
+    for root in (0, 17):
+        res = compiled.bfs(root)
+        parent, level = np.asarray(res.parent), np.asarray(res.level)
+        single = plan_bfs(ev, g.degree, root, core=core, chunks=chunks)
+        assert np.array_equal(parent[:V], np.asarray(single.parent)), (shape, root)
+        assert np.array_equal(level[:V], np.asarray(single.level)), (shape, root)
+        assert np.all(parent[V:] == -1) and np.all(level[V:] == -1)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_word_cyclic_balances_degree_sorted_shards():
+    """Satellite acceptance: per-shard edge-count skew (max/mean) at
+    scale 12 over 8 shards after the degree sort is >= 2x lower under
+    word_cyclic than block (host-side partitioner, no devices needed)."""
+    import numpy as np
+
+    from repro.core import (
+        build_csr, degree_reorder, generate_edges,
+    )
+    from repro.core.distributed_bfs import shard_edge_skew, shard_graph
+    from repro.core.graph_build import csr_to_edge_arrays
+    from repro.core.reorder import relabel_edges
+
+    edges = generate_edges(11, 12)
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)          # T2a: heavy vertices low ids
+    g = build_csr(relabel_edges(edges, r))
+    src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
+    skews = {}
+    for part in ("block", "word_cyclic"):
+        sg = shard_graph(src, dst, valid, g.num_vertices, 8, partition=part)
+        assert sg.partition == part
+        skews[part] = shard_edge_skew(sg)
+    assert skews["block"]["max_over_mean"] >= \
+        2.0 * skews["word_cyclic"]["max_over_mean"], skews
+    # both partitions cover every edge exactly once
+    n_edges = int(valid.sum())
+    assert skews["block"]["max"] <= n_edges
+    for part in skews:
+        assert sum(skews[part]["per_shard_edges"]) == n_edges, part
+
+
+def test_shard_graph_counts_source_only_vertices():
+    """Satellite: n_active counts the src∪dst endpoint union — a vertex
+    with only outgoing edges (possible on a non-symmetrized edge list)
+    must not be silently dropped from the eq. (1)/(2) switch denominator."""
+    import numpy as np
+
+    from repro.core.distributed_bfs import shard_graph
+
+    # 5 -> 2 and 7 -> 2: vertices 5 and 7 have ONLY outgoing edges
+    src = np.asarray([5, 7], np.int32)
+    dst = np.asarray([2, 2], np.int32)
+    valid = np.ones(2, bool)
+    for part in ("block", "word_cyclic"):
+        sg = shard_graph(src, dst, valid, 16, 2, partition=part)
+        assert int(sg.n_active) == 3, (part, int(sg.n_active))
+
+
+def test_dead_chunks_killed_and_bu_skips_padding_on_skewed_shard():
+    """Satellite regression: a deliberately skewed block partition (star
+    graph — every edge points at vertex 0, so shard 0 owns all edges and
+    shard 1 is pure padding).  The all-invalid chunks carry the
+    src_lo = V_pad / src_hi = -1 sentinels, chunk_range_mask provably
+    kills them for ANY frontier, the BU live-chunk prefix excludes them,
+    and the traversal stays bitwise-identical to single-device."""
+    import numpy as np
+
+    from repro.core.bfs_steps import chunk_range_mask
+    from repro.core.distributed_bfs import shard_graph
+
+    n = 64
+    hub = np.zeros(n - 1, np.int32)
+    spokes = np.arange(1, n, dtype=np.int32)
+    src = np.concatenate([spokes, hub])     # symmetric star
+    dst = np.concatenate([hub, spokes])
+    valid = np.ones(src.shape, bool)
+    sg = shard_graph(src, dst, valid, n, 2, n_chunks=4, partition="block")
+    counts = np.asarray(sg.valid).sum(axis=(1, 2))
+    # shard 0 owns the hub AND every spoke (v_loc >= n), shard 1 nothing
+    assert counts[0] == len(src) and counts[1] == 0, counts
+    v_pad = sg.num_vertices
+    src_lo = np.asarray(sg.src_lo)
+    src_hi = np.asarray(sg.src_hi)
+    # the dead shard's chunks carry the all-invalid sentinels
+    assert np.all(src_lo[1] == v_pad) and np.all(src_hi[1] == -1)
+    # chunk_range_mask kills them even for an all-ones frontier
+    full_frontier = np.full(v_pad // 32, 0xFFFFFFFF, np.uint32)
+    import jax.numpy as jnp
+    live = np.asarray(chunk_range_mask(
+        jnp.asarray(src_lo[1]), jnp.asarray(src_hi[1]),
+        jnp.asarray(full_frontier)))
+    assert not live.any(), live
+    # the BU prefix bound (live chunks per shard) is exact: padding is a
+    # contiguous tail, so nonempty chunks form a prefix
+    n_live = (src_hi >= 0).sum(axis=1)
+    assert n_live[1] == 0
+    assert n_live[0] == -(-counts[0] // sg.chunk_size)
+
+    # parity on the skewed graph, both shards traversing
+    out = run_sub(PREAMBLE + """
+from repro.core.distributed_bfs import shard_graph
+from repro.core.bfs_steps import edge_view as _ev, EdgeView
+import jax.numpy as jnp
+n = 64
+hub = np.zeros(n - 1, np.int32)
+spokes = np.arange(1, n, dtype=np.int32)
+src = np.concatenate([spokes, hub])
+dst = np.concatenate([hub, spokes])
+valid = np.ones(src.shape, bool)
+degree = np.bincount(src, minlength=n).astype(np.int32)
+ev = EdgeView(src=jnp.asarray(src), dst=jnp.asarray(dst),
+              valid=jnp.asarray(valid), num_vertices=n)
+single = plan_bfs(ev, jnp.asarray(degree), 3)
+sg = shard_graph(src, dst, valid, n, 2, n_chunks=4, partition="block")
+mesh = make_mesh((2, 1), ("group", "member"))
+res = vertex_plan(mesh, sg).bfs(3)
+parent = np.asarray(res.parent)
+assert np.array_equal(parent[:n], np.asarray(single.parent))
+assert np.all(parent[n:] == -1)
+print("OK")
+""")
+    assert "OK" in out
+
+
 def test_vertex_sharded_nonmultiple_word_count():
     """Satellite: word counts that do NOT divide n_devices (3 and 5
-    shards over a 1024-word bitmap) exercise the padded tail path."""
+    shards over a 1024-word bitmap) exercise the padded tail path —
+    under BOTH vertex partitions (the word-cyclic padded words stride
+    across every shard instead of piling onto the last)."""
     out = run_sub(PREAMBLE + """
 from repro.core.distributed_bfs import shard_graph
 from repro.core.heavy import padded_bitmap_words
@@ -130,19 +272,24 @@ g, ev, core, chunks = sorted_graph(12, seed=11, threshold=32)
 src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
 w_base = padded_bitmap_words(g.num_vertices)
 for shape in ((3, 1), (1, 5)):
-    p = shape[0] * shape[1]
-    assert w_base % p != 0, (w_base, p)   # the case under test
-    sg = shard_graph(src, dst, valid, g.num_vertices, p)
+  p = shape[0] * shape[1]
+  assert w_base % p != 0, (w_base, p)   # the case under test
+  for part in ("block", "word_cyclic"):
+    sg = shard_graph(src, dst, valid, g.num_vertices, p, partition=part)
     assert sg.num_vertices > g.num_vertices  # padded tail exists
     # non-pow2 members are allowed through a caller-supplied mesh=
     mesh = make_mesh(shape, ("group", "member"))
-    res = vertex_plan(mesh, sg, core=core).bfs(0)
+    plan = BFSPlan(layout=("group", "member"), partition=part,
+                   batch_roots=False)
+    res = compile_plan(plan, PreparedGraph(core=core, sharded=sg,
+                                           degree=g.degree),
+                       mesh=mesh).bfs(0)
     parent, level = np.asarray(res.parent), np.asarray(res.level)
     single = plan_bfs(ev, g.degree, 0, core=core, chunks=chunks)
     V = g.num_vertices
-    assert np.array_equal(parent[:V], np.asarray(single.parent)), shape
-    assert np.array_equal(level[:V], np.asarray(single.level)), shape
-    assert np.all(parent[V:] == -1), shape
+    assert np.array_equal(parent[:V], np.asarray(single.parent)), (shape, part)
+    assert np.array_equal(level[:V], np.asarray(single.level)), (shape, part)
+    assert np.all(parent[V:] == -1), (shape, part)
 print("OK")
 """)
     assert "OK" in out
@@ -150,7 +297,9 @@ print("OK")
 
 def test_exchange_wirings_bit_identical():
     """hier_or (two-phase OR reduction), hier_gather (monitor all-gather)
-    and flat all-gather must produce the same traversal."""
+    and flat all-gather must produce the same traversal — under BOTH
+    vertex partitions (the cyclic owner map makes the hier_or scatter
+    strided and transposes the gathered device-major blocks)."""
     out = run_sub(PREAMBLE + """
 import warnings
 from repro.core.distributed_bfs import shard_graph, make_dist_bfs, gather_result
@@ -159,13 +308,20 @@ src, dst, valid = (np.asarray(t) for t in csr_to_edge_arrays(g))
 sg = shard_graph(src, dst, valid, g.num_vertices, 8)
 mesh = make_mesh((2, 4), ("group", "member"))
 results = {}
-for exch in ("hier_or", "hier_gather", "flat"):
-    res = vertex_plan(mesh, sg, core=core, exchange=exch).bfs(5)
-    results[exch] = (np.asarray(res.parent), np.asarray(res.level))
-ref_p, ref_l = results["hier_or"]
-for exch, (p, l) in results.items():
-    assert np.array_equal(p, ref_p), exch
-    assert np.array_equal(l, ref_l), exch
+for part in ("block", "word_cyclic"):
+    sg_p = shard_graph(src, dst, valid, g.num_vertices, 8, partition=part)
+    for exch in ("hier_or", "hier_gather", "flat"):
+        plan = BFSPlan(layout=("group", "member"), exchange=exch,
+                       partition=part, batch_roots=False)
+        res = compile_plan(plan, PreparedGraph(core=core, sharded=sg_p,
+                                               degree=g.degree),
+                           mesh=mesh).bfs(5)
+        results[(part, exch)] = (np.asarray(res.parent),
+                                 np.asarray(res.level))
+ref_p, ref_l = results[("block", "hier_or")]
+for key, (p, l) in results.items():
+    assert np.array_equal(p, ref_p), key
+    assert np.array_equal(l, ref_l), key
 # legacy-compat flag still routes: hierarchical=False -> flat (the one
 # intentional shim call here; its DeprecationWarning is acknowledged)
 with warnings.catch_warnings():

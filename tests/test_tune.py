@@ -49,6 +49,16 @@ def test_enumerate_small_budget_is_canonical_and_unique():
     assert (("root", "group", "member"), (2, 2, 2)) in layouts
     # exchange only varies where a member axis exists
     assert all(p.exchange == "hier_or" for p in plans)
+    # the partition axis sweeps BOTH owner maps on vertex-sharded
+    # layouts and stays pinned to block everywhere else (word_cyclic on
+    # a member-less layout is a validation error, never enumerated)
+    for layout, shape in layouts:
+        parts = {p.partition for p in plans
+                 if (p.layout, p.mesh_shape) == (layout, shape)}
+        if "member" in layout:
+            assert parts == {"block", "word_cyclic"}, (layout, parts)
+        else:
+            assert parts == {"block"}, (layout, parts)
 
 
 def test_enumerate_full_budget_crosses_axes():
@@ -189,6 +199,25 @@ def test_schema_version_rejection(tmp_path):
     # from_dict itself rejects foreign plan fields
     with pytest.raises(ValueError, match="unknown BFSPlan fields"):
         BFSPlan.from_dict({"engine": "bitmap", "warp_speed": 9})
+
+
+def test_v1_schema_rejected_with_actionable_message(tmp_path):
+    """A pre-partition (v1) table must be rejected — its winners were
+    ranked without the word_cyclic candidates — and the error must say
+    what to do about it."""
+    path = str(tmp_path / "TUNED_PLANS.json")
+    save_tuned(_report(), path)
+    doc = json.load(open(path))
+    doc["schema_version"] = 1
+    for entry in doc["entries"].values():
+        entry["plan"].pop("partition", None)
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ValueError) as ei:
+        load_table(path)
+    msg = str(ei.value)
+    assert "partition" in msg and "repro.core.tune" in msg
+    with pytest.raises(ValueError, match="partition"):
+        save_tuned(_report(scale=14), path)       # never clobbered either
 
 
 def test_tuned_plan_fallback_when_no_entry_matches(tmp_path):
