@@ -17,7 +17,14 @@ XLA:CPU; relative rungs, not absolute GTEPS, are the tracked numbers):
     ``word_cyclic`` (paper eq. (3); ``2x2_cyc``) — and every vertex
     rung records the per-shard edge-count skew (``edge_skew``:
     max / mean / max_over_mean of the dst-owner counts, the padding
-    overhead the block layout pays after the degree sort).
+    overhead the block layout pays after the degree sort).  The 4x2
+    shape additionally runs the DESIGN.md §12 wire-codec exchanges —
+    ``hier_or_packed`` (density-adaptive sparse/dense codec on the
+    inter-group leg; rungs ``4x2_pack`` / ``4x2_pack_cyc``) and
+    ``hier_or_sieve`` (visited-sieve then pack; ``4x2_sieve`` /
+    ``4x2_sieve_cyc``) — and every vertex rung records the modeled
+    per-level wire bytes (raw vs post-sieve vs post-codec per exchange
+    leg, ``wire_bytes``) recovered from the first root's level array.
   * composed        — ``BFSPlan(layout=("root", "group", "member"))``
     over the 2x2x2 mesh: the root batch splits over its own mesh axis
     OUTSIDE the vertex-sharded SPMD program (layer 1 x layer 2).
@@ -204,7 +211,7 @@ def _child() -> dict:
     # all visible devices (member sized to the router group) rides along
     # as its own rung so the eq.-5-derived shape is measured, not assumed.
     from repro.comms.topology import plan_device_mesh
-    from repro.core.distributed_bfs import shard_edge_skew
+    from repro.core.distributed_bfs import modeled_wire_bytes, shard_edge_skew
     planned = plan_device_mesh(len(jax.devices()))
     shapes = list(VERTEX_SHAPES)
     if planned not in shapes:
@@ -212,24 +219,39 @@ def _child() -> dict:
     out["planned_shape"] = f"{planned[0]}x{planned[1]}"
     vroots = roots[:n_vroots]
     # both partitions cover the same shape set — including the planner's
-    # eq.-5 shape, so the block-vs-cyclic skew comparison exists for it
-    cases = ([(s, "block") for s in shapes]
-             + [(s, "word_cyclic") for s in shapes])
-    for shape, partition in cases:
-        name = (f"{shape[0]}x{shape[1]}"
+    # eq.-5 shape, so the block-vs-cyclic skew comparison exists for it;
+    # the §12 wire-codec exchanges (hier_or_packed = density-adaptive
+    # codec on the inter-group leg, hier_or_sieve = visited-sieve then
+    # pack) ride on the 4x2 acceptance shape under both partitions
+    cases = ([(s, "block", "hier_or") for s in shapes]
+             + [(s, "word_cyclic", "hier_or") for s in shapes]
+             + [((4, 2), p, e)
+                for e in ("hier_or_packed", "hier_or_sieve")
+                for p in ("block", "word_cyclic")])
+    suffix = {"hier_or": "", "hier_or_packed": "_pack",
+              "hier_or_sieve": "_sieve"}
+    for shape, partition, exchange in cases:
+        name = (f"{shape[0]}x{shape[1]}" + suffix[exchange]
                 + ("_cyc" if partition == "word_cyclic" else ""))
         if not wanted(name):
             continue
         plan = BFSPlan(layout=("group", "member"), mesh_shape=shape,
-                       exchange="hier_or", partition=partition)
+                       exchange=exchange, partition=partition)
         compiled = compile_plan(plan, pg)    # shards the graph internally
         skew = shard_edge_skew(compiled.graph.sharded)
         result = compiled.run(vroots)
         run = result.run
         if not run.all_valid:
             raise AssertionError(
-                f"vertex-sharded mesh={shape} partition={partition}: "
-                f"spec validation failed")
+                f"vertex-sharded mesh={shape} partition={partition} "
+                f"exchange={exchange}: spec validation failed")
+        # modeled per-level wire bytes (raw / post-sieve / post-codec per
+        # exchange leg, DESIGN.md §12) recovered from the first root's
+        # level array — surfaced by benchmarks/breakdown.py
+        wire = modeled_wire_bytes(
+            result.level[0], n_devices=shape[0] * shape[1],
+            w_loc=compiled.graph.sharded.w_loc,
+            group=shape[0], member=shape[1], partition=partition)
         out["vertex_sharded"][name] = {
             "mesh": f"{shape[0]}x{shape[1]}",
             "layer": "vertex_sharded",
@@ -240,10 +262,14 @@ def _child() -> dict:
             "n_roots": len(vroots),
             "validated": run.all_valid,
             "edge_skew": skew,
+            "wire_bytes": wire,
         }
+        wt = wire["totals"]
         print(f"# vertex_sharded mesh={name}: "
               f"wall={float(np.sum(run.times_s)):.2f}s "
-              f"skew={skew['max_over_mean']:.2f}", file=sys.stderr)
+              f"skew={skew['max_over_mean']:.2f} "
+              f"wire_inter={wt['inter_raw']}B"
+              f"->codec {wt['inter_post_codec']}B", file=sys.stderr)
 
     # ---- composed 3-axis ladder (layer 1 x layer 2) --------------------
     for shape in COMPOSED_SHAPES:

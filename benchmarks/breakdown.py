@@ -7,8 +7,18 @@ bytes per level over the eq.(5) hop model with per-hop latency + link
 bandwidth, under each monitor policy. Mirrors the paper's stacked bars:
 naive -> random -> heaviest -> orchestra shrinks the comm share while
 compute stays ~constant.
+
+Additionally surfaces the DESIGN.md §12 wire-codec model: every
+vertex-sharded rung in BENCH_bfs.json records modeled per-level wire
+bytes (raw vs post-sieve vs post-codec per exchange leg, written by
+benchmarks/bfs_sharded.py); the ``breakdown/wire/*`` rows convert the
+inter-group totals to modeled transfer time over the same link model so
+the codec's volume win sits next to the monitor-policy bars.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 import jax.numpy as jnp
@@ -80,4 +90,41 @@ def run():
             f"comm_share={comm_s * levels / total:.2%};levels={levels}"))
     rows.append(row("breakdown/core_kernel_per_level", t_core * 1e6,
                     f"levels={levels}"))
+    rows.extend(wire_codec_rows())
+    return rows
+
+
+def wire_codec_rows():
+    """Modeled wire-byte tiers from the committed BENCH_bfs.json rungs.
+
+    Reads the latest-scale vertex-sharded rungs and, for each rung that
+    carries ``wire_bytes`` (written by benchmarks/bfs_sharded.py),
+    emits one row whose value is the modeled inter-group transfer time
+    post-codec; meta carries the raw / post-sieve / post-codec byte
+    totals and the codec compression ratio.  Skips silently when the
+    baseline predates the §12 metadata.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        with open(os.path.join(repo, "BENCH_bfs.json")) as f:
+            mod = json.load(f)["modules"]["bfs_sharded"]
+        payload = mod["by_scale"][str(mod["latest_scale"])]
+    except (OSError, ValueError, KeyError):
+        return []
+    rows = []
+    for name, rung in sorted(payload.get("vertex_sharded", {}).items()):
+        wb = rung.get("wire_bytes")
+        if not wb:
+            continue
+        t = wb["totals"]
+        codec_us = t["inter_post_codec"] / LINK_BYTES_S * 1e6
+        raw_us = t["inter_raw"] / LINK_BYTES_S * 1e6
+        ratio = t["inter_raw"] / max(t["inter_post_codec"], 1)
+        rows.append(row(
+            f"breakdown/wire/{name}", codec_us,
+            f"raw_us={raw_us:.1f};inter_raw={t['inter_raw']};"
+            f"post_sieve={t['inter_post_sieve']};"
+            f"post_codec={t['inter_post_codec']};"
+            f"intra_raw={t['intra_raw']};"
+            f"codec_ratio={ratio:.1f}x;levels={wb['levels']}"))
     return rows

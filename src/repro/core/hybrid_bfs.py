@@ -619,7 +619,8 @@ def bfs_batch_sharded(
 # V/8 bytes per level per device, like the paper's bitmap exchange.
 # ---------------------------------------------------------------------------
 
-SHARD_EXCHANGES = ("hier_or", "hier_gather", "flat")
+SHARD_EXCHANGES = ("hier_or", "hier_gather", "flat", "hier_or_packed",
+                   "hier_or_sieve")
 
 
 def _axis_names_tuple(name) -> tuple:
@@ -643,7 +644,8 @@ def _shard_index(group_axis, member_axis):
 
 
 def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
-                    group_axis, member_axis, partition="block"):
+                    group_axis, member_axis, partition="block",
+                    known_bm=None):
     """Combine per-shard delta words into the full next-frontier bitmap.
 
     Delta bits live only in the owner's words (dst-owned edges find owned
@@ -653,7 +655,7 @@ def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
     ``j`` is global word ``d*W_loc + j`` — exactly the device-major block
     order the gather collectives emit; under ``word_cyclic`` it is global
     word ``d + j*P``, so the OR-scatter is strided and the gathered
-    device-major blocks transpose into word order.  Three wirings, all
+    device-major blocks transpose into word order.  Five wirings, all
     bit-identical:
 
       * ``hier_or``     — scatter the owned words into a zero full-width
@@ -664,14 +666,27 @@ def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
       * ``hier_gather`` — two-phase hierarchical all-gather of the blocks
         (1/M inter-group bytes; exploits disjointness).
       * ``flat``        — single-phase all-gather (the ablation baseline).
+      * ``hier_or_packed`` — ``hier_or`` with the density-adaptive wire
+        codec on the inter-group leg (DESIGN.md §12): each level each
+        shard ships a sparse set-bit index list when the delta popcount
+        is below threshold, raw words otherwise, selected in-loop by
+        ``lax.cond``.
+      * ``hier_or_sieve``  — sieve-then-pack: the outgoing delta is ANDed
+        against ``known_bm`` (the destination's last-known visited words,
+        replicated — arXiv:1208.5542's visited sieve) before the codec'd
+        inter-group leg.  Dst-owned deltas are already disjoint from the
+        visited set, so the sieve removes nothing here — it is carried
+        for the paper-structure and stays correct (and starts paying)
+        if a future edge partition produces overlapping deltas.
     """
     from repro.comms.hierarchical import (
+        compressed_hierarchical_por,
         hierarchical_all_gather,
         hierarchical_por,
     )
 
     axes = _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis)
-    if exchange == "hier_or":
+    if exchange in ("hier_or", "hier_or_packed", "hier_or_sieve"):
         if partition == "word_cyclic":
             # global word j*P + d <-> matrix slot [j, d]: placing the
             # owned words in column `dev` of a [W_loc, P] zero matrix is
@@ -684,7 +699,11 @@ def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
             full = jnp.zeros((n_dev * w_loc,), jnp.uint32)
             full = jax.lax.dynamic_update_slice(full, delta_loc,
                                                 (dev * w_loc,))
-        return hierarchical_por(full, group_axis, member_axis)
+        if exchange == "hier_or":
+            return hierarchical_por(full, group_axis, member_axis)
+        known = known_bm if exchange == "hier_or_sieve" else None
+        return compressed_hierarchical_por(full, group_axis, member_axis,
+                                           known=known)
     if exchange == "hier_gather":
         out = hierarchical_all_gather(delta_loc, group_axis, member_axis)
     elif exchange == "flat":
@@ -704,6 +723,10 @@ class _ShardState(NamedTuple):
     level_loc: jax.Array     # [V_loc] int32
     frontier_bm: jax.Array   # [W] uint32 — full width, replicated value
     visited_loc: jax.Array   # [W_loc] uint32 — resident, owned words only
+    known_bm: jax.Array      # [W] uint32 — full-width visited-so-far union
+                             # (the sieve mask of the hier_or_sieve
+                             # exchange: every shard's last-known view of
+                             # the global visited words)
     in_count: jax.Array      # [] int32 — global popcount(frontier)
     vis_count: jax.Array     # [] int32 — global
     m_f: jax.Array           # [] int32 — global frontier degree sum
@@ -904,7 +927,7 @@ def _run_bitmap_sharded(
         next_bm = _exchange_delta(
             delta_loc, dev, w_loc, n_dev, exchange=exchange,
             group_axis=group_axis, member_axis=member_axis,
-            partition=partition)
+            partition=partition, known_bm=s.known_bm)
         in_count = jnp.sum(popcount_u32(next_bm)).astype(jnp.int32)
         if w_loc % WORDS_PER_TILE == 0:
             _, new_visited_loc, _ = kops.frontier_update(
@@ -924,6 +947,7 @@ def _run_bitmap_sharded(
 
         nxt = _ShardState(
             new_parent, new_level, next_bm, new_visited_loc,
+            s.known_bm | next_bm,
             in_count, s.vis_count + in_count,
             m_next, s.deg_vis + m_next,
             s.lvl + 1, direction,
@@ -936,7 +960,7 @@ def _run_bitmap_sharded(
             lambda new, old: jnp.where(alive, new, old), nxt, s)
 
     init = _ShardState(
-        parent_loc, level_loc, frontier_bm, visited_loc,
+        parent_loc, level_loc, frontier_bm, visited_loc, frontier_bm,
         jnp.int32(1), jnp.int32(1), deg_root, deg_root,
         jnp.int32(0), TOP_DOWN,
         jnp.full((max_levels,), -1, jnp.int32),

@@ -112,7 +112,12 @@ class BFSPlan:
       ``mesh_shape``  per-axis sizes; ``None`` infers from the visible
                       devices (the (group, member) split comes from the
                       eq.-5 interconnect model via ``plan_device_mesh``)
-      ``exchange``    §4.3 monitor wiring of the per-level delta combine
+      ``exchange``    §4.3 monitor wiring of the per-level delta combine:
+                      ``hier_or`` / ``hier_gather`` / ``flat``, plus the
+                      DESIGN.md §12 wire-codec variants ``hier_or_packed``
+                      (density-adaptive index-list codec on the
+                      inter-group leg) and ``hier_or_sieve``
+                      (visited-sieve then pack)
       ``partition``   vertex-ownership map of the sharded engine:
                       ``block`` (contiguous word blocks) vs
                       ``word_cyclic`` (eq. (3) cyclic ownership at

@@ -101,13 +101,20 @@ class TuneBudget:
 
 
 BUDGETS = {
-    "small": TuneBudget("small"),
+    # the CI smoke sweeps the wire-codec variants (DESIGN.md §12) next to
+    # the raw hier_or so their bitwise-parity acceptance runs on every PR
+    "small": TuneBudget(
+        "small", exchanges=("hier_or", "hier_or_packed", "hier_or_sieve")),
     "medium": TuneBudget(
-        "medium", exchanges=("hier_or", "hier_gather"),
+        "medium",
+        exchanges=("hier_or", "hier_gather", "hier_or_packed",
+                   "hier_or_sieve"),
         alpha_beta=((8.0, 64.0), (14.0, 24.0)), n_chunks=(16, 64),
         all_factorizations=True, n_roots=8, reps=2),
     "full": TuneBudget(
-        "full", exchanges=("hier_or", "hier_gather", "flat"),
+        "full",
+        exchanges=("hier_or", "hier_gather", "flat", "hier_or_packed",
+                   "hier_or_sieve"),
         alpha_beta=((8.0, 24.0), (8.0, 64.0), (14.0, 24.0), (14.0, 64.0)),
         n_chunks=(16, 64, 256), all_factorizations=True, n_roots=16, reps=3),
 }

@@ -88,6 +88,51 @@ def test_partition_flip_is_a_plan_change_not_a_match():
         ("bfs_sharded/scale12/vertex_sharded/4x2", "plan dict changed")]
 
 
+def test_unknown_exchange_rejected_with_valid_values():
+    """Satellite: an unknown exchange name fails fast at validate_plan
+    with the full SHARD_EXCHANGES list in the message — it must never
+    reach the SPMD program or the gate."""
+    from repro.core.hybrid_bfs import SHARD_EXCHANGES
+    from repro.core.plan import validate_plan
+
+    assert "hier_or_packed" in SHARD_EXCHANGES
+    assert "hier_or_sieve" in SHARD_EXCHANGES
+    plan = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2),
+                   exchange="hier_or_zstd")
+    with pytest.raises(ValueError) as e:
+        validate_plan(plan)
+    msg = str(e.value)
+    assert "hier_or_zstd" in msg
+    for name in SHARD_EXCHANGES:
+        assert name in msg
+
+
+def test_pre_codec_baseline_default_fills_and_new_rung_not_gated():
+    """Satellite: a committed baseline predating the §12 exchanges still
+    default-fills and gates its hier_or rung, while a NEW-exchange rung
+    absent from the baseline reports as unmatched (not gated), never as
+    a regression."""
+    old_plan = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2)).to_dict()
+    old_plan.pop("partition")          # pre-v2 baseline shape
+    base = collect_rungs(_doc(old_plan, teps=1000.0))
+
+    # current run carries the old rung plus a fresh 4x2_sieve rung
+    doc = _doc(BFSPlan(layout=("group", "member"), mesh_shape=(4, 2))
+               .to_dict(), teps=990.0)
+    scale = doc["modules"]["bfs_sharded"]["by_scale"]["12"]
+    sieve_plan = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2),
+                         exchange="hier_or_sieve").to_dict()
+    scale["vertex_sharded"]["4x2_sieve"] = {
+        "plan": sieve_plan, "harmonic_mean_teps": 10.0}
+    scale["rungs_from_this_run"] = ["4x2", "4x2_sieve"]
+    cur = collect_rungs(doc, only_fresh=True)
+    regressions, matched, unmatched = compare(base, cur, 0.25)
+    assert len(matched) == 1 and not regressions
+    assert unmatched == [
+        ("bfs_sharded/scale12/vertex_sharded/4x2_sieve",
+         "missing from baseline")]
+
+
 def test_old_baseline_vs_old_current_unaffected():
     """Two pre-partition docs (the committed trajectory before this PR)
     still compare exactly as before the default fill existed."""

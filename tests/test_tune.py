@@ -47,8 +47,14 @@ def test_enumerate_small_budget_is_canonical_and_unique():
     # the hand-picked BENCH rung is in the sweep, so the ranked table
     # always positions the winner against it
     assert (("root", "group", "member"), (2, 2, 2)) in layouts
-    # exchange only varies where a member axis exists
-    assert all(p.exchange == "hier_or" for p in plans)
+    # exchange only varies where a member axis exists: the smoke budget
+    # sweeps the §12 wire-codec variants on vertex layouts and stays
+    # pinned to hier_or everywhere else
+    vertexy = [p for p in plans if "member" in p.layout]
+    assert ({p.exchange for p in vertexy}
+            == {"hier_or", "hier_or_packed", "hier_or_sieve"})
+    assert all(p.exchange == "hier_or" for p in plans
+               if "member" not in p.layout)
     # the partition axis sweeps BOTH owner maps on vertex-sharded
     # layouts and stays pinned to block everywhere else (word_cyclic on
     # a member-less layout is a validation error, never enumerated)
@@ -64,7 +70,8 @@ def test_enumerate_small_budget_is_canonical_and_unique():
 def test_enumerate_full_budget_crosses_axes():
     plans = enumerate_plans(8, BUDGETS["full"])
     vertex = [p for p in plans if "member" in p.layout]
-    assert {p.exchange for p in vertex} == {"hier_or", "hier_gather", "flat"}
+    assert {p.exchange for p in vertex} == {
+        "hier_or", "hier_gather", "flat", "hier_or_packed", "hier_or_sieve"}
     assert {(p.alpha, p.beta) for p in plans} == set(BUDGETS["full"].alpha_beta)
     assert {p.n_chunks for p in plans} == set(BUDGETS["full"].n_chunks)
     # root-only layouts never multiply by the (dead) exchange axis

@@ -1,0 +1,140 @@
+"""Density-adaptive delta codec + wire-byte model (DESIGN.md §12).
+
+The codec (``encode_delta`` / ``decode_delta``) must round-trip every
+uint32 bitmap exactly regardless of the sparse/dense threshold — the
+threshold moves bytes, never bits — and ``modeled_wire_bytes`` must
+report post-sieve / post-codec volumes that never exceed raw.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms.hierarchical import decode_delta, encode_delta
+from repro.core.distributed_bfs import modeled_wire_bytes
+
+# non-dividing word counts on purpose: 1, prime, 32+1
+WORD_COUNTS = (1, 3, 5, 7, 33)
+
+
+def roundtrip(words, threshold):
+    mode, payload, count = encode_delta(words, threshold=threshold)
+    return decode_delta(mode, payload, count)
+
+
+def _cases(w):
+    rng = np.random.default_rng(w)
+    dense = rng.integers(0, 2**32, size=w, dtype=np.uint32)
+    single = np.zeros(w, np.uint32)
+    single[w // 2] = np.uint32(1) << 17 % 32
+    return {
+        "empty": np.zeros(w, np.uint32),
+        "single_bit": single,
+        "dense": dense,
+        "all_ones": np.full(w, 0xFFFFFFFF, dtype=np.uint32),
+    }
+
+
+@pytest.mark.parametrize("w", WORD_COUNTS)
+def test_roundtrip_identity(w):
+    for name, arr in _cases(w).items():
+        words = jnp.asarray(arr)
+        for thr in (None, 0, 1, w, 10**9):
+            out = np.asarray(roundtrip(words, thr))
+            np.testing.assert_array_equal(
+                out, arr, err_msg=f"case={name} w={w} threshold={thr}")
+
+
+def test_mode_selection():
+    # empty and single-bit fit any positive threshold -> sparse (mode 1);
+    # all-ones exceeds every threshold below 32*w -> dense (mode 0)
+    w = 5
+    mode, _, count = encode_delta(jnp.zeros(w, jnp.uint32), threshold=w)
+    assert int(mode) == 1 and int(count) == 0
+    mode, _, count = encode_delta(
+        jnp.full(w, 0xFFFFFFFF, dtype=jnp.uint32), threshold=w)
+    assert int(mode) == 0 and int(count) == 32 * w
+    # threshold=None defaults to w set bits -> w+1 bits goes dense
+    arr = np.zeros(w, np.uint32)
+    arr[0] = (1 << (w + 1)) - 1
+    mode, _, _ = encode_delta(jnp.asarray(arr))
+    assert int(mode) == 0
+    arr[0] = (1 << w) - 1
+    mode, _, _ = encode_delta(jnp.asarray(arr))
+    assert int(mode) == 1
+
+
+def test_threshold_never_changes_or_result():
+    # property: OR of decoded payloads from mixed-threshold encoders is
+    # the OR of the inputs — the in-loop density switch cannot perturb
+    # the combined delta
+    rng = np.random.default_rng(42)
+    w = 33
+    for trial in range(10):
+        parts = [
+            rng.integers(0, 2**32, size=w, dtype=np.uint32)
+            * (rng.random(w) < p)
+            for p in (0.02, 0.5, 1.0)
+        ]
+        expect = parts[0] | parts[1] | parts[2]
+        for thresholds in ((0, w, 10**9), (w, w, w), (10**9, 0, 1)):
+            acc = np.zeros(w, np.uint32)
+            for arr, thr in zip(parts, thresholds):
+                acc = acc | np.asarray(roundtrip(jnp.asarray(arr), thr))
+            np.testing.assert_array_equal(acc, expect)
+
+
+def test_roundtrip_under_jit():
+    w = 7
+    arr = _cases(w)["dense"]
+
+    @jax.jit
+    def f(x):
+        return roundtrip(x, 3)
+
+    np.testing.assert_array_equal(np.asarray(f(jnp.asarray(arr))), arr)
+
+
+def test_rejects_non_uint32():
+    with pytest.raises(TypeError):
+        encode_delta(jnp.zeros(4, jnp.int32))
+
+
+def test_modeled_wire_bytes_orders():
+    # a tiny 2-level BFS level array over 8 devices: codec and sieve
+    # tiers can never exceed raw, and levels are enumerated 1..depth
+    rng = np.random.default_rng(0)
+    n = 512
+    level = np.where(rng.random(n) < 0.1, 1, 2).astype(np.int32)
+    level[rng.random(n) < 0.05] = -1
+    for partition in ("block", "word_cyclic"):
+        wb = modeled_wire_bytes(level, n_devices=8, w_loc=2,
+                                group=4, member=2, partition=partition)
+        assert wb["levels"] == 2
+        assert [p["level"] for p in wb["per_level"]] == [1, 2]
+        t = wb["totals"]
+        assert 0 < t["inter_post_codec"] <= t["inter_raw"]
+        assert 0 < t["inter_post_sieve"] <= t["inter_raw"]
+        for p in wb["per_level"]:
+            assert p["inter"]["post_codec"] <= p["inter"]["raw"]
+            assert p["inter"]["post_sieve"] <= p["inter"]["raw"]
+
+
+def test_modeled_wire_bytes_exact_tiny():
+    # 1 frontier vertex, 2 groups x 1 member, 1 word each: raw leg is
+    # (g-1) * 4 bytes * w_pad per device; codec leg is 8 bytes for the
+    # owning block (4*pop+4) and 4 bytes for the empty one (header)
+    level = np.full(64, -1, np.int32)
+    level[0] = 0
+    level[3] = 1
+    wb = modeled_wire_bytes(level, n_devices=2, w_loc=1,
+                            group=2, member=1, partition="block")
+    assert wb["levels"] == 1
+    p = wb["per_level"][0]
+    assert p["frontier"] == 1
+    # m=1 divides w_pad=2 -> sw=2; raw = g*(g-1)*4*sw = 2*1*4*2 = 16
+    assert p["inter"]["raw"] == 16
+    # one set bit lives in one word: per device min(raw_blk, 4*pop+4)
+    # = 8 for each device's block (pop counts only that device's slice)
+    assert p["inter"]["post_codec"] == (4 * 1 + 4) + 4
+    assert wb["totals"]["intra_raw"] == 0
