@@ -239,12 +239,18 @@ def _child() -> dict:
                        exchange=exchange, partition=partition)
         compiled = compile_plan(plan, pg)    # shards the graph internally
         skew = shard_edge_skew(compiled.graph.sharded)
-        result = compiled.run(vroots)
+        result = compiled.run(vroots, check="post")
         run = result.run
         if not run.all_valid:
-            raise AssertionError(
-                f"vertex-sharded mesh={shape} partition={partition} "
-                f"exchange={exchange}: spec validation failed")
+            # fail LOUDLY, naming the rung, root and check — a silently
+            # wrong tree must never post a TEPS number (DESIGN.md §13)
+            detail = "; ".join(
+                f"root {r} failed {'+'.join(names)}"
+                for r, names in sorted(run.check_failures.items()))
+            raise RuntimeError(
+                f"vertex-sharded rung {name} (mesh={shape} "
+                f"partition={partition} exchange={exchange}): spec "
+                f"validation failed — {detail or 'unknown check'}")
         # modeled per-level wire bytes (raw / post-sieve / post-codec per
         # exchange leg, DESIGN.md §12) recovered from the first root's
         # level array — surfaced by benchmarks/breakdown.py
@@ -261,6 +267,7 @@ def _child() -> dict:
             "harmonic_mean_teps": run.harmonic_mean_teps,
             "n_roots": len(vroots),
             "validated": run.all_valid,
+            "check_counts": run.check_counts,
             "edge_skew": skew,
             "wire_bytes": wire,
         }

@@ -130,9 +130,12 @@ def main() -> None:
             if hasattr(mod, "selected_rungs"):
                 selected_rungs |= set(mod.selected_rungs())
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
-        except Exception:
+        except Exception as e:
             failures.append(name)
-            print(f"# {name} FAILED:", flush=True)
+            # one loud greppable line naming the module and the error
+            # (validation failures arrive as RuntimeError naming the
+            # rung, root and failed check), then the full traceback
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
             traceback.print_exc()
     _write_json(payloads)
     if args.rungs and not failures:

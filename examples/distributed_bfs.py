@@ -1,6 +1,7 @@
 """Mesh-sharded BFS through the plan API on 8 host devices.
 
     PYTHONPATH=src python examples/distributed_bfs.py
+    PYTHONPATH=src python examples/distributed_bfs.py --inject
 
 Demonstrates the spec→plan→runner lifecycle (DESIGN.md §10): one
 scale-12 graph, five vertex-sharded exchange wirings (T3 monitor
@@ -10,8 +11,15 @@ variants with a per-level wire-byte trace), and the composed
 the root axis OUTSIDE the vertex-sharded SPMD program.  Every layout's
 parents are asserted bitwise-identical to the single-device bitmap
 engine, so this script is also the CI composed-mesh smoke.
+
+``--inject`` runs the fault-injection recovery demo instead (DESIGN.md
+§13): a persistent exchange corruption is detected by checked execution
+and recovered through the retry → degraded-fallback path, then a
+persistent parent-scatter corruption (which survives the fallback too)
+drives every root into quarantine.
 """
 import os
+import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
@@ -45,6 +53,53 @@ base_parent = np.asarray(base_res.parent)
 _, l_ref = reference_bfs(np.asarray(g.row_offsets),
                          np.asarray(g.col_indices), 0)
 assert np.array_equal(np.asarray(base_res.level)[0], l_ref)
+
+if "--inject" in sys.argv[1:]:
+    # Fault-injection recovery demo (DESIGN.md §13).  Faults are static:
+    # the corruption is compiled into the program, the clean path stays
+    # byte-identical.
+    from repro.core import FaultSpec
+
+    plan = BFSPlan(layout=("group", "member"), mesh_shape=(2, 4))
+
+    # 1. persistent exchange corruption: every per-level delta from every
+    #    shard is zeroed from level 1 on — the traversal stalls after the
+    #    root's own neighborhood.  check="full" attributes it to the
+    #    in-loop conservation sentinel AND the component spec check;
+    #    retries can't help (the fault is persistent) but the degraded
+    #    single-device fallback has no exchange, so every root recovers.
+    f = FaultSpec(site="exchange", kind="zero", level=1, persistent=True)
+    compiled = compile_plan(plan, pg, fault=f)
+    res = compiled.run(roots, check="full", retries=1, fallback=True)
+    run = res.run
+    print(f"inject exchange/zero: detected={run.check_counts} "
+          f"retries={run.retries} fallbacks={run.fallbacks} "
+          f"quarantined={run.quarantined} valid={run.all_valid}")
+    assert run.check_counts["component"] == 8
+    assert run.check_counts["sentinel"] == 8
+    assert run.retries == 8 and run.fallbacks == 8
+    assert not run.quarantined and run.all_valid
+    assert np.array_equal(res.parent, base_parent), \
+        "recovered parents must match the clean single-device oracle"
+
+    # 2. persistent parent-scatter corruption: newly found vertices are
+    #    recorded as their own parent.  The depth check catches it, but
+    #    the fault site exists on the degraded path too — retry AND
+    #    fallback re-fail, so every root is quarantined and the harmonic
+    #    mean excludes all of them.
+    f2 = FaultSpec(site="parent", kind="self", level=1, persistent=True)
+    compiled2 = compile_plan(plan, pg, fault=f2)
+    res2 = compiled2.run(roots, check="post", retries=1, fallback=True)
+    run2 = res2.run
+    print(f"inject parent/self:  detected={run2.check_counts} "
+          f"retries={run2.retries} fallbacks={run2.fallbacks} "
+          f"quarantined={run2.quarantined}")
+    assert run2.check_counts["depth"] == 8
+    assert run2.retries == 8 and run2.fallbacks == 8
+    assert run2.quarantined == list(range(8))
+    assert run2.harmonic_mean_teps == 0.0
+    print("INJECT OK")
+    sys.exit(0)
 
 # layer 2: vertex-sharded (2, 4) mesh, all five exchange wirings —
 # including the DESIGN.md §12 wire codecs (hier_or_packed = density-

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import faults
 from repro.kernels.ref import popcount_u32
 from repro.util import axis_size, shard_map
 
@@ -151,17 +152,27 @@ def _or_reduce_scatter(x, axis_name: str):
     return out
 
 
-def _or_all_reduce(x, axis_name: str):
-    """Bitwise-OR all-reduce over one mesh axis (gather + local fold)."""
+def _or_all_reduce(x, axis_name: str, *, fault=None, level=None,
+                   device=None, root=None):
+    """Bitwise-OR all-reduce over one mesh axis (gather + local fold).
+
+    ``fault`` (DESIGN.md §13, site ``inter_group``) is only threaded in
+    by the inter-group call sites: when it fires, every receiver keeps
+    only the axis-index-0 contribution (``g[0]`` is replicated along the
+    reduced axis, so the SPMD loop stays uniform) — the dropped-forward
+    failure mode of the monitor exchange.
+    """
     n = axis_size(axis_name)
     g = lax.all_gather(x, axis_name, axis=0, tiled=False)
     out = g[0]
     for i in range(1, n):
         out = out | g[i]
-    return out
+    return faults.drop_peers(fault, out, g[0], level=level, device=device,
+                             root=root) if fault is not None else out
 
 
-def hierarchical_por(x, group_axis: str, member_axis: str):
+def hierarchical_por(x, group_axis: str, member_axis: str, *,
+                     fault=None, level=None, device=None, root=None):
     """Lossless bitwise-OR hierarchical all-reduce for bitmap payloads.
 
     The integer/bitmap analogue of :func:`hierarchical_psum` — the T3
@@ -179,9 +190,11 @@ def hierarchical_por(x, group_axis: str, member_axis: str):
     if x.shape[0] % m != 0:
         # fall back: OR within group first, then across (still two-phase)
         x = _or_all_reduce(x, member_axis)
-        return _or_all_reduce(x, group_axis)
+        return _or_all_reduce(x, group_axis, fault=fault, level=level,
+                              device=device, root=root)
     shard = _or_reduce_scatter(x, member_axis)
-    shard = _or_all_reduce(shard, group_axis)
+    shard = _or_all_reduce(shard, group_axis, fault=fault, level=level,
+                           device=device, root=root)
     return lax.all_gather(shard, member_axis, axis=0, tiled=True)
 
 
@@ -253,24 +266,37 @@ def decode_delta(mode: jax.Array, payload: jax.Array, count: jax.Array):
     return lax.cond(mode == 1, dec_sparse, dec_dense, None)
 
 
-def _encoded_or_all_reduce(x, axis_name, *, threshold=None):
+def _encoded_or_all_reduce(x, axis_name, *, threshold=None, fault=None,
+                           level=None, device=None, root=None):
     """Bitwise-OR all-reduce whose per-device contribution round-trips
     through the density-adaptive codec — the wire representation of the
     inter-group leg.  Bit-exact vs :func:`_or_all_reduce` (the codec is
-    lossless); the modeled bytes are what shrink."""
+    lossless); the modeled bytes are what shrink.
+
+    Fault sites (§13): ``codec`` corrupts this shard's outgoing
+    ``(mode, payload, count)`` wire triple *between* encode and decode —
+    a flipped payload slot, a truncated sparse count, or the wrong mode
+    header; ``inter_group`` drops every contribution but index 0's after
+    the decode fold (the dropped-forward mode, replicated).
+    """
     n = axis_size(axis_name)
     mode, payload, count = encode_delta(x, threshold=threshold)
+    mode, payload, count = faults.corrupt_encoded(
+        fault, mode, payload, count, level=level, device=device, root=root)
     hdr = jnp.stack([mode, count])
     hdrs = lax.all_gather(hdr, axis_name, axis=0, tiled=False)
     payloads = lax.all_gather(payload, axis_name, axis=0, tiled=False)
-    out = decode_delta(hdrs[0, 0], payloads[0], hdrs[0, 1])
+    first = decode_delta(hdrs[0, 0], payloads[0], hdrs[0, 1])
+    out = first
     for i in range(1, n):
         out = out | decode_delta(hdrs[i, 0], payloads[i], hdrs[i, 1])
-    return out
+    return faults.drop_peers(fault, out, first, level=level, device=device,
+                             root=root) if fault is not None else out
 
 
 def compressed_hierarchical_por(x, group_axis: str, member_axis: str, *,
-                                known=None, threshold=None):
+                                known=None, threshold=None, fault=None,
+                                level=None, device=None, root=None):
     """:func:`hierarchical_por` with the visited sieve and the
     density-adaptive codec on the *inter-group* leg — the lossless-integer
     sibling of :func:`compressed_hierarchical_psum`'s bfloat16 cast
@@ -298,9 +324,13 @@ def compressed_hierarchical_por(x, group_axis: str, member_axis: str, *,
         # fall back: OR within group first, then the encoded exchange
         # across groups (still two-phase, still codec'd on the wire leg)
         x = _or_all_reduce(x, member_axis)
-        return _encoded_or_all_reduce(x, group_axis, threshold=threshold)
+        return _encoded_or_all_reduce(x, group_axis, threshold=threshold,
+                                      fault=fault, level=level,
+                                      device=device, root=root)
     shard = _or_reduce_scatter(x, member_axis)
-    shard = _encoded_or_all_reduce(shard, group_axis, threshold=threshold)
+    shard = _encoded_or_all_reduce(shard, group_axis, threshold=threshold,
+                                   fault=fault, level=level, device=device,
+                                   root=root)
     return lax.all_gather(shard, member_axis, axis=0, tiled=True)
 
 

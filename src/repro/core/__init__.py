@@ -14,7 +14,8 @@ from repro.core.bfs_steps import (
 from repro.core.hybrid_bfs import (
     BFSResult, bfs_batch, bfs_batch_sharded, hybrid_bfs,
 )
-from repro.core.validate import validate
+from repro.core.faults import FAULT_CLASSES, FaultSpec
+from repro.core.validate import CHECK_NAMES, validate, validate_batch
 from repro.core.teps import (
     run_graph500, run_graph500_batched, run_graph500_sharded, traversed_edges,
 )
@@ -44,7 +45,9 @@ __all__ = [
     "unpack_bitmap",
     "ChunkedEdgeView", "EdgeView", "chunk_edge_view", "edge_view",
     "BFSResult", "bfs_batch", "bfs_batch_sharded", "hybrid_bfs",
-    "validate", "run_graph500", "run_graph500_batched",
+    "FAULT_CLASSES", "FaultSpec",
+    "CHECK_NAMES", "validate", "validate_batch",
+    "run_graph500", "run_graph500_batched",
     "run_graph500_sharded", "traversed_edges",
     "BFSPlan", "CompiledBFS", "Graph500Result", "PreparedGraph",
     "compile_plan",

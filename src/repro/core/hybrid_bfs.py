@@ -41,6 +41,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.core.bfs_steps import (
     DEFAULT_CHUNKS,
     ChunkedEdgeView,
@@ -65,6 +66,9 @@ MAX_LEVELS = 64
 TOP_DOWN, BOTTOM_UP = jnp.int32(0), jnp.int32(1)
 
 ENGINES = ("reference", "legacy", "bitmap")
+
+#: All in-loop sentinel bits passing (BFSStats.sentinel, DESIGN.md §13).
+SENTINEL_OK = 7
 
 
 def _switch_direction(direction, in_count, vis_count, n_active,
@@ -95,6 +99,13 @@ class BFSStats(NamedTuple):
     levels: jax.Array           # [] int32
     scanned_chunks: jax.Array   # [MAX_LEVELS] int32 — edge chunks relaxed (-1 n/a)
     total_chunks: jax.Array     # [] int32 — chunk count (0 for unchunked engines)
+    # In-loop sentinel trace (DESIGN.md §13): per-level bitmask, -1 for
+    # unused levels, else bit0 = exchange conservation (next-frontier
+    # popcount == Σ shard delta popcounts), bit1 = frontier ∩ visited = ∅,
+    # bit2 = level within bound — a healthy level reads 7.  None for the
+    # legacy engines (trailing default keeps their positional
+    # constructions valid).
+    sentinel: jax.Array | None = None
 
 
 class BFSResult(NamedTuple):
@@ -260,6 +271,7 @@ class _ResidentState(NamedTuple):
     stats_fs: jax.Array
     stats_se: jax.Array
     stats_ch: jax.Array
+    stats_ok: jax.Array      # [MAX_LEVELS] int32 — sentinel masks (§13)
 
 
 def _core_bottom_up_resident(core: HeavyCore, frontier_bm, visited_bm,
@@ -356,6 +368,7 @@ def _run_bitmap_impl(
     use_core: bool,
     max_levels: int,
     use_pallas_core: bool = True,
+    fault=None,
 ) -> BFSResult:
     v = chunks.num_vertices
     w = padded_bitmap_words(v)
@@ -419,8 +432,23 @@ def _run_bitmap_impl(
         # anyway) packs word-wise into next_raw (I3), then the fused
         # kernel does mask / merge / popcount in one pass (T1).
         newly = (new_parent[:v] != v) & (s.parent_ext[:v] == v)
+        if fault is not None and fault.site == "parent":
+            pv = faults.corrupt_parent(
+                fault, new_parent[:v], newly,
+                jnp.arange(v, dtype=jnp.int32), jnp.int32(v),
+                level=s.lvl, root=root)
+            new_parent = jnp.concatenate([pv, new_parent[v:]])
         found = _pack_delta_words(newly, w)
         next_bm, new_visited_bm, count = kops.frontier_update(found, s.visited_bm)
+
+        # In-loop sentinels (§13): delta conservation (no found bit was
+        # already visited), frontier ∩ visited = ∅, level bound.
+        s1 = count.astype(jnp.int32) == jnp.sum(
+            popcount_u32(found)).astype(jnp.int32)
+        s2 = jnp.sum(popcount_u32(next_bm & s.visited_bm)) == 0
+        s3 = s.lvl + 1 <= jnp.int32(max_levels)
+        ok_mask = (s1.astype(jnp.int32) + 2 * s2.astype(jnp.int32)
+                   + 4 * s3.astype(jnp.int32))
 
         new_level = jnp.where(newly, s.lvl + 1, s.level)
         m_next = jnp.sum(jnp.where(newly, degree, 0)).astype(jnp.int32)
@@ -439,6 +467,7 @@ def _run_bitmap_impl(
             s.stats_fs.at[s.lvl].set(s.in_count),
             s.stats_se.at[s.lvl].set(scanned),
             s.stats_ch.at[s.lvl].set(nsc),
+            s.stats_ok.at[s.lvl].set(ok_mask),
         )
         return jax.tree_util.tree_map(
             lambda new, old: jnp.where(alive, new, old), nxt, s)
@@ -451,6 +480,7 @@ def _run_bitmap_impl(
         jnp.zeros((max_levels,), jnp.int32),
         jnp.zeros((max_levels,), jnp.int32),
         jnp.full((max_levels,), -1, jnp.int32),
+        jnp.full((max_levels,), -1, jnp.int32),
     )
     s = jax.lax.while_loop(cond, body, init)
     # unpack once at exit: outputs are the parent/level arrays (the resident
@@ -462,11 +492,13 @@ def _run_bitmap_impl(
         stats=BFSStats(
             s.stats_dir, s.stats_fs, s.stats_se, s.lvl,
             s.stats_ch, jnp.int32(chunks.n_chunks),
+            s.stats_ok,
         ),
     )
 
 
-_BITMAP_STATICS = ("alpha", "beta", "use_core", "max_levels", "use_pallas_core")
+_BITMAP_STATICS = ("alpha", "beta", "use_core", "max_levels",
+                   "use_pallas_core", "fault")
 
 _run_bitmap = functools.partial(
     jax.jit, static_argnames=_BITMAP_STATICS,
@@ -475,13 +507,14 @@ _run_bitmap = functools.partial(
 
 @functools.partial(jax.jit, static_argnames=_BITMAP_STATICS)
 def _run_batch(chunks, degree, n_active, roots, core, *,
-               alpha, beta, use_core, max_levels, use_pallas_core):
+               alpha, beta, use_core, max_levels, use_pallas_core,
+               fault=None):
     """All search keys under ONE jitted program (vmap over roots)."""
     return jax.vmap(
         lambda r: _run_bitmap_impl(
             chunks, degree, n_active, r, core,
             alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
-            use_pallas_core=use_pallas_core)
+            use_pallas_core=use_pallas_core, fault=fault)
     )(roots)
 
 
@@ -645,7 +678,7 @@ def _shard_index(group_axis, member_axis):
 
 def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
                     group_axis, member_axis, partition="block",
-                    known_bm=None):
+                    known_bm=None, fault=None, level=None, root=None):
     """Combine per-shard delta words into the full next-frontier bitmap.
 
     Delta bits live only in the owner's words (dst-owned edges find owned
@@ -685,6 +718,11 @@ def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
         hierarchical_por,
     )
 
+    # Fault site "exchange" (§13): the outgoing per-level delta words —
+    # shared by every wiring, upstream of scatter/gather/codec.
+    delta_loc = faults.corrupt_delta(fault, delta_loc, level=level,
+                                     device=dev, root=root)
+
     axes = _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis)
     if exchange in ("hier_or", "hier_or_packed", "hier_or_sieve"):
         if partition == "word_cyclic":
@@ -700,10 +738,19 @@ def _exchange_delta(delta_loc, dev, w_loc, n_dev, *, exchange,
             full = jax.lax.dynamic_update_slice(full, delta_loc,
                                                 (dev * w_loc,))
         if exchange == "hier_or":
-            return hierarchical_por(full, group_axis, member_axis)
+            return hierarchical_por(full, group_axis, member_axis,
+                                    fault=fault, level=level, device=dev,
+                                    root=root)
         known = known_bm if exchange == "hier_or_sieve" else None
+        if known is not None:
+            # Fault site "sieve": a stale known_bm wrongly strips delta
+            # bits off the wire before the codec'd inter-group leg.
+            known = faults.corrupt_known(fault, known, level=level,
+                                         device=dev, root=root)
         return compressed_hierarchical_por(full, group_axis, member_axis,
-                                           known=known)
+                                           known=known, fault=fault,
+                                           level=level, device=dev,
+                                           root=root)
     if exchange == "hier_gather":
         out = hierarchical_all_gather(delta_loc, group_axis, member_axis)
     elif exchange == "flat":
@@ -737,6 +784,7 @@ class _ShardState(NamedTuple):
     stats_fs: jax.Array
     stats_se: jax.Array
     stats_ch: jax.Array
+    stats_ok: jax.Array      # [MAX_LEVELS] int32 — sentinel masks (§13)
 
 
 def _relax_owned_edges(sc, dst_loc, vc, frontier_bm, visited_loc,
@@ -777,6 +825,7 @@ def _run_bitmap_sharded(
     member_axis: str = "member",
     exchange: str = "hier_or",
     partition: str = "block",
+    fault=None,
 ) -> BFSResult:
     """Vertex-sharded bitmap-resident BFS — runs INSIDE ``shard_map``.
 
@@ -923,12 +972,40 @@ def _run_bitmap_sharded(
         # Epilogue: pack the owned delta words (I3), OR-combine across the
         # mesh (T3 two-phase), fuse the owned-slice mask/merge/popcount.
         newly = (new_parent[:v_loc] != v_pad) & (s.parent_loc[:v_loc] == v_pad)
+        if fault is not None and fault.site == "parent":
+            pv = faults.corrupt_parent(
+                fault, new_parent[:v_loc], newly, to_global(slots),
+                jnp.int32(v_pad), level=s.lvl, device=dev, root=root)
+            new_parent = jnp.concatenate([pv, new_parent[v_loc:]])
         delta_loc = _pack_delta_words(newly, w_loc)
         next_bm = _exchange_delta(
             delta_loc, dev, w_loc, n_dev, exchange=exchange,
             group_axis=group_axis, member_axis=member_axis,
-            partition=partition, known_bm=s.known_bm)
+            partition=partition, known_bm=s.known_bm,
+            fault=fault, level=s.lvl, root=root)
         in_count = jnp.sum(popcount_u32(next_bm)).astype(jnp.int32)
+
+        # In-loop sentinels (§13): exchange conservation (the combined
+        # next frontier must carry exactly the bits the shards packed —
+        # owner words are disjoint, so popcounts add), frontier ∩ visited
+        # = ∅ over the owned slice, level bound.  A corrupted exchange
+        # (dropped leg, mangled codec, stale sieve, flipped word) breaks
+        # one of the first two the moment it fires.
+        delta_sum = jax.lax.psum(
+            jnp.sum(popcount_u32(delta_loc)).astype(jnp.int32), axes)
+        if cyclic:
+            own_next = jnp.take(next_bm.reshape(w_loc, n_dev), dev, axis=1)
+        else:
+            own_next = jax.lax.dynamic_slice(next_bm, (dev * w_loc,),
+                                             (w_loc,))
+        overlap = jax.lax.psum(
+            jnp.sum(popcount_u32(own_next & s.visited_loc)).astype(jnp.int32),
+            axes)
+        s1 = in_count == delta_sum
+        s2 = overlap == 0
+        s3 = s.lvl + 1 <= jnp.int32(max_levels)
+        ok_mask = (s1.astype(jnp.int32) + 2 * s2.astype(jnp.int32)
+                   + 4 * s3.astype(jnp.int32))
         if w_loc % WORDS_PER_TILE == 0:
             _, new_visited_loc, _ = kops.frontier_update(
                 delta_loc, s.visited_loc)
@@ -955,6 +1032,7 @@ def _run_bitmap_sharded(
             s.stats_fs.at[s.lvl].set(s.in_count),
             s.stats_se.at[s.lvl].set(scanned),
             s.stats_ch.at[s.lvl].set(nsc_all),
+            s.stats_ok.at[s.lvl].set(ok_mask),
         )
         return jax.tree_util.tree_map(
             lambda new, old: jnp.where(alive, new, old), nxt, s)
@@ -967,6 +1045,7 @@ def _run_bitmap_sharded(
         jnp.zeros((max_levels,), jnp.int32),
         jnp.zeros((max_levels,), jnp.int32),
         jnp.full((max_levels,), -1, jnp.int32),
+        jnp.full((max_levels,), -1, jnp.int32),
     )
     s = jax.lax.while_loop(cond, body, init)
     parent = jnp.where(s.parent_loc[:v_loc] == v_pad, -1, s.parent_loc[:v_loc])
@@ -976,5 +1055,6 @@ def _run_bitmap_sharded(
         stats=BFSStats(
             s.stats_dir, s.stats_fs, s.stats_se, s.lvl,
             s.stats_ch, jnp.int32(n_chunks),
+            s.stats_ok,
         ),
     )

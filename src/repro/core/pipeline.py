@@ -77,6 +77,13 @@ class Graph500Config:
     # on the tuned plan; with no matching entry the config falls back to
     # the untuned derivation.
     tuned: bool = False
+    # Checked execution + recovery (DESIGN.md §13): the verification
+    # mode ("off" | "post" | "full"), the per-root retry budget, and
+    # whether still-failing roots re-run on the degraded single-device
+    # fallback plan before quarantine.
+    check: str = "post"
+    retries: int = 0
+    fallback: bool = False
 
     @staticmethod
     def ladder(rung: str, **kw) -> "Graph500Config":
@@ -195,4 +202,5 @@ def run(cfg: Graph500Config, built: BuiltGraph | None = None) -> tuple[BuiltGrap
     if built.reorder is not None:
         roots = built.reorder.new_from_old[roots]
     compiled = compile_plan(cfg.to_plan(), built)
-    return built, compiled.run(roots).run
+    return built, compiled.run(roots, check=cfg.check, retries=cfg.retries,
+                               fallback=cfg.fallback).run

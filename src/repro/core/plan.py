@@ -84,8 +84,9 @@ from repro.core.hybrid_bfs import (
     _run_bitmap_sharded,
     _run_legacy,
 )
+from repro.core.hybrid_bfs import SENTINEL_OK
 from repro.core.teps import Graph500Run, traversed_edges
-from repro.core.validate import validate
+from repro.core.validate import failure_report, validate_batch
 from repro.kernels import ops as kops
 from repro.util import make_mesh, shard_map
 
@@ -193,6 +194,7 @@ class ShardedRun(NamedTuple):
     parent: jax.Array   # [..., V_pad] int32, -1 unvisited
     level: jax.Array    # [..., V_pad] int32
     levels: jax.Array   # per-root levels run
+    sentinel: Any = None  # [..., max_levels] int32 in-loop sentinel masks
 
 
 @dataclass
@@ -416,11 +418,11 @@ _MESH_FN_CACHE: dict = {}
 
 
 def _root_parallel_fn(mesh, root_axis, alpha, beta, use_core, max_levels,
-                      use_pallas_core):
+                      use_pallas_core, fault=None):
     """Jitted layer-1 program: roots split over ``root_axis``, graph
     replicated, zero communication."""
     key = ("root", mesh, root_axis, alpha, beta, use_core, max_levels,
-           use_pallas_core)
+           use_pallas_core, fault)
     fn = _MESH_FN_CACHE.get(key)
     if fn is not None:
         return fn
@@ -430,7 +432,8 @@ def _root_parallel_fn(mesh, root_axis, alpha, beta, use_core, max_levels,
             lambda r: _run_bitmap_impl(
                 chunks, degree, n_active, r, core,
                 alpha=alpha, beta=beta, use_core=use_core,
-                max_levels=max_levels, use_pallas_core=use_pallas_core)
+                max_levels=max_levels, use_pallas_core=use_pallas_core,
+                fault=fault)
         )(roots)
 
     fn = jax.jit(shard_map(
@@ -460,6 +463,7 @@ def vertex_sharded_program(
     max_levels: int = MAX_LEVELS,
     use_pallas_core: bool = False,
     batched: bool = False,
+    fault=None,
 ):
     """Build the UNJITTED shard_map'd vertex-sharded BFS program.
 
@@ -470,14 +474,17 @@ def vertex_sharded_program(
     mesh axes (the dry-run's ``("pod", "data")`` group).  With
     ``root_axis`` set, the roots vector splits over that axis OUTSIDE
     this SPMD program — the composed ``("root", "group", "member")``
-    layout — and the body vmaps its local root slice.
+    layout — and the body vmaps its local root slice.  ``fault`` is a
+    static :class:`repro.core.faults.FaultSpec` baked into the engine's
+    injection hooks (DESIGN.md §13); ``None`` compiles the clean program.
 
     Signature of the returned function::
 
         f(roots, src, dst_local, valid, src_lo, src_hi, degree_local,
-          n_active[, core]) -> (parent, level, levels)
+          n_active[, core]) -> (parent, level, levels, sentinel)
 
-    (``core`` is an argument only when ``use_core``.)
+    (``core`` is an argument only when ``use_core``; ``sentinel`` is the
+    per-level in-loop check-mask trace of ``BFSStats.sentinel``.)
     """
     va = _flat_names((group_axis, member_axis))
     run_one = functools.partial(
@@ -485,7 +492,7 @@ def vertex_sharded_program(
         alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
         use_pallas_core=use_pallas_core, w_loc=w_loc, n_dev=n_dev,
         group_axis=group_axis, member_axis=member_axis, exchange=exchange,
-        partition=partition,
+        partition=partition, fault=fault,
     )
     vmapped = batched or root_axis is not None
 
@@ -498,19 +505,21 @@ def vertex_sharded_program(
             res = jax.vmap(lambda r: run_one(*args, n_active, r, core))(roots)
         else:
             res = run_one(*args, n_active, roots, core)
-        return res.parent, res.level, res.stats.levels
+        return (res.parent, res.level, res.stats.levels,
+                res.stats.sentinel)
 
     g_spec = P(va)
     core_specs = (P(),) if use_core else ()
     if root_axis is not None:
         in_specs = (P(root_axis),) + (g_spec,) * 6 + (P(),) + core_specs
-        out_specs = (P(root_axis, va), P(root_axis, va), P(root_axis))
+        out_specs = (P(root_axis, va), P(root_axis, va), P(root_axis),
+                     P(root_axis))
     elif batched:
         in_specs = (P(),) + (g_spec,) * 6 + (P(),) + core_specs
-        out_specs = (P(None, va), P(None, va), P())
+        out_specs = (P(None, va), P(None, va), P(), P())
     else:
         in_specs = (P(),) + (g_spec,) * 6 + (P(),) + core_specs
-        out_specs = (P(va), P(va), P())
+        out_specs = (P(va), P(va), P(), P())
     return shard_map(local, mesh=mesh, in_specs=in_specs,
                      out_specs=out_specs, check=False)
 
@@ -529,7 +538,7 @@ def _vertex_fn(mesh, **kw):
 # ---------------------------------------------------------------------------
 
 def compile_plan(plan: BFSPlan, built, *, mesh=None,
-                 axis_names=None) -> "CompiledBFS":
+                 axis_names=None, fault=None) -> "CompiledBFS":
     """Validate ``plan``, prepare the graph inputs, and close over one
     jitted (possibly shard_map'd) callable.
 
@@ -540,8 +549,19 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
     power-of-two member check is skipped for caller-supplied meshes).
     ``axis_names`` renames layout roles onto concrete mesh axes (entries
     may be tuples for factored roles).
+
+    ``fault`` (DESIGN.md §13) is a static
+    :class:`repro.core.faults.FaultSpec` compiled into the bitmap
+    engines' injection hooks — deterministic corruption for exercising
+    the checked execution mode and the recovery policy.  ``None`` (the
+    default) compiles the clean program; the legacy engines have no
+    injection sites and reject a fault.
     """
     validate_plan(plan)
+    if fault is not None and plan.engine != "bitmap":
+        raise ValueError(
+            f"fault injection requires engine='bitmap' (got "
+            f"{plan.engine!r}); the legacy engines have no hooks")
     mesh, names = _resolve_mesh(plan, mesh, axis_names)
     role = dict(zip(plan.layout, names))
     vertexy = "member" in plan.layout
@@ -564,7 +584,8 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
                     chunks, degree, n_active, roots,
                     core if use_core else None,
                     alpha=plan.alpha, beta=plan.beta, use_core=use_core,
-                    max_levels=plan.max_levels, use_pallas_core=use_pallas)
+                    max_levels=plan.max_levels, use_pallas_core=use_pallas,
+                    fault=fault)
         else:
             ev, chunks, degree, core = pg.ev, pg.chunks, pg.degree, pg.core
             n_active = jnp.sum(degree > 0).astype(jnp.int32)
@@ -577,7 +598,7 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
                         chunks, degree, n_active, root,
                         core if use_core else None,
                         alpha=plan.alpha, beta=plan.beta, use_core=use_core,
-                        max_levels=plan.max_levels)
+                        max_levels=plan.max_levels, fault=fault)
                 return _run_legacy(
                     ev, degree, n_active, root,
                     core if legacy_core else None,
@@ -589,7 +610,7 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
         chunks, degree, core = pg.chunks, pg.degree, pg.core
         n_active = jnp.sum(degree > 0).astype(jnp.int32)
         fn = _root_parallel_fn(mesh, role["root"], plan.alpha, plan.beta,
-                               use_core, plan.max_levels, use_pallas)
+                               use_core, plan.max_levels, use_pallas, fault)
 
         def raw(roots):
             return fn(chunks, degree, n_active, roots,
@@ -607,6 +628,7 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
             alpha=plan.alpha, beta=plan.beta,
             use_core=use_core, max_levels=plan.max_levels,
             use_pallas_core=use_pallas, batched=plan.batch_roots,
+            fault=fault,
         )
         core_args = (pg.core,) if use_core else ()
         # Reassembly: shard outputs concatenate shard-major; under the
@@ -617,20 +639,20 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
                 if plan.partition != "block" else None)
 
         def raw(roots):
-            parent, level, levels = fn(
+            parent, level, levels, sentinel = fn(
                 roots, sg.src, sg.dst_local, sg.valid, sg.src_lo,
                 sg.src_hi, sg.degree_local, sg.n_active, *core_args)
             if perm is not None:
                 parent = jnp.take(parent, perm, axis=-1)
                 level = jnp.take(level, perm, axis=-1)
-            return parent, level, levels
+            return parent, level, levels, sentinel
 
         v_orig = sg.v_orig
 
     return CompiledBFS(
         plan=plan, mesh=mesh, graph=pg, num_vertices=v_orig,
         _raw=raw, _vertexy=vertexy, _root_axis_size=root_axis_size,
-        _axis_names=names,
+        _axis_names=names, _fault=fault,
     )
 
 
@@ -653,6 +675,8 @@ class CompiledBFS:
     _vertexy: bool = False
     _root_axis_size: int = 1
     _axis_names: tuple = ()
+    _fault: Any = None          # the static FaultSpec compiled in (or None)
+    _fallback: Any = None       # lazily-built degraded-plan CompiledBFS
 
     @property
     def mesh_axes(self) -> Optional[dict]:
@@ -681,19 +705,104 @@ class CompiledBFS:
             out = jax.tree_util.tree_map(lambda x: x[:n], out)
         return out
 
-    def run(self, roots, *, warmup: bool = True,
-            do_validate: bool = True) -> Graph500Result:
-        """Graph500 steps 3 + 4 under this plan.
+    def _strip(self, x):    # drop shard padding on the device, not via H2D
+        v = self.num_vertices
+        return x if x.shape[-1] == v else x[..., :v]
+
+    def _sentinel_of(self, res):
+        """The per-level in-loop check-mask trace of one raw result, or
+        ``None`` for engines without one (legacy)."""
+        if self._vertexy:
+            return res.sentinel
+        stats = getattr(res, "stats", None)
+        return None if stats is None else stats.sentinel
+
+    def _solve_roots(self, roots_np):
+        """Untimed re-solve of the given roots: stripped numpy
+        parent / level row batches plus the per-root sentinel trace
+        (``None`` when the engine has no trace)."""
+        roots_np = np.asarray(roots_np, np.int32).reshape(-1)
+        if self.plan.batch_roots:
+            res = self.bfs(roots_np)
+            sent = self._sentinel_of(res)
+            return (np.asarray(self._strip(res.parent)),
+                    np.asarray(self._strip(res.level)),
+                    None if sent is None else np.asarray(sent))
+        ps, ls, ss = [], [], []
+        for r in roots_np:
+            res = self.bfs(int(r))
+            ps.append(np.asarray(self._strip(res.parent)))
+            ls.append(np.asarray(self._strip(res.level)))
+            ss.append(self._sentinel_of(res))
+        sent = (np.stack([np.asarray(s) for s in ss])
+                if all(s is not None for s in ss) else None)
+        return np.stack(ps), np.stack(ls), sent
+
+    def _fallback_compiled(self):
+        """The degraded recovery plan (DESIGN.md §13): a single-device
+        batched bitmap traversal, compiled lazily from the unsharded
+        inputs and cached.  ``None`` when those inputs are missing or
+        this plan already IS the degraded shape (no further downgrade
+        exists).  The compiled fault rides along — recovery models
+        routing around a broken exchange, not un-breaking hardware, so
+        only faults whose site exists on the degraded path persist."""
+        if self._fallback is not None:
+            return self._fallback
+        pg = self.graph
+        if pg.ev is None or pg.degree is None:
+            return None
+        if (not self.plan.layout and self.plan.engine == "bitmap"
+                and self.plan.batch_roots):
+            return None
+        fb_plan = BFSPlan(engine="bitmap", layout=(), batch_roots=True,
+                          alpha=self.plan.alpha, beta=self.plan.beta,
+                          max_levels=self.plan.max_levels,
+                          n_chunks=self.plan.n_chunks)
+        self._fallback = compile_plan(
+            fb_plan, PreparedGraph(ev=pg.ev, degree=pg.degree, core=pg.core),
+            fault=self._fault)
+        return self._fallback
+
+    def run(self, roots, *, warmup: bool = True, do_validate: bool = True,
+            check: str | None = None, retries: int = 0,
+            fallback: bool = False) -> Graph500Result:
+        """Graph500 steps 3 + 4 under this plan, with checked execution.
 
         Batched plans time ONE fused program and attribute
         wall-clock / n_roots to each search (DESIGN.md §8); per-root
-        plans time each search separately.  Spec validation runs per
-        root when ``do_validate`` is on AND the unsharded edge view is
-        available; otherwise ``validated`` stays empty, so ``all_valid``
-        reports False rather than vacuously True.  (This is stricter
-        than the legacy harnesses, which recorded True per root under
-        ``do_validate=False`` — the deprecation shims backfill that.)
+        plans time each search separately.
+
+        ``check`` selects the verification mode (DESIGN.md §13):
+
+          ``"off"``   no checks; ``validated`` stays empty, so
+                      ``all_valid`` reports False rather than vacuously
+                      True.
+          ``"post"``  ONE vmapped :func:`validate_batch` dispatch over
+                      the whole root batch (all five spec checks, no
+                      per-root host loop), with per-check failure counts
+                      in ``run.check_counts`` and per-root attribution
+                      in ``run.check_failures``.
+          ``"full"``  ``"post"`` plus the cheap in-loop sentinels the
+                      bitmap engines carry through the level loop
+                      (exchange conservation, frontier∩visited = ∅,
+                      level bound) surfaced as the ``"sentinel"`` check.
+
+        ``check=None`` (default) maps ``do_validate`` onto ``"post"`` /
+        ``"off"`` for backward compatibility.
+
+        Recovery: roots failing any check are re-run untimed up to
+        ``retries`` times, then (``fallback=True``) re-run on the
+        degraded single-device plan of :meth:`_fallback_compiled`; roots
+        still failing are **quarantined** — TEPS forced to 0.0 so the
+        harmonic mean excludes them, root ids recorded in
+        ``run.quarantined``.  ``run.retries`` / ``run.fallbacks`` count
+        the re-solved roots per stage.
         """
+        if check is None:
+            check = "post" if do_validate else "off"
+        if check not in ("off", "post", "full"):
+            raise ValueError(
+                f"check must be 'off', 'post' or 'full' (got {check!r})")
         if self.graph.degree is None:
             raise ValueError("CompiledBFS.run needs built.degree for the "
                              "TEPS edge count (pass it via PreparedGraph)")
@@ -707,9 +816,6 @@ class CompiledBFS:
                 g500, self.plan, self.mesh_axes)
         degree = self.graph.degree
 
-        def strip(x):   # drop shard padding on the device, not via H2D
-            return x if x.shape[-1] == v else x[..., :v]
-
         if self.plan.batch_roots:
             if warmup:
                 jax.block_until_ready(self.bfs(roots_np).parent)
@@ -717,39 +823,106 @@ class CompiledBFS:
             res = self.bfs(roots_np)
             res.parent.block_until_ready()
             per_root_s = (time.perf_counter() - t0) / n
-            parent_dev = strip(res.parent)
-            level_dev = strip(res.level)
-            m_all = jax.vmap(lambda p: traversed_edges(
-                degree, BFSResult(parent=p, level=None, stats=None))
-            )(parent_dev)
+            parent_dev = self._strip(res.parent)
+            level_dev = self._strip(res.level)
+            sent = self._sentinel_of(res)
             times = [per_root_s] * n
         else:
             if warmup:
                 jax.block_until_ready(self.bfs(int(roots_np[0])).parent)
-            rows, times = [], []
+            rows, times, sents = [], [], []
             for r in roots_np:
                 t0 = time.perf_counter()
                 res = self.bfs(int(r))
                 res.parent.block_until_ready()
                 times.append(time.perf_counter() - t0)
-                rows.append((strip(res.parent), strip(res.level)))
+                rows.append((self._strip(res.parent),
+                             self._strip(res.level)))
+                sents.append(self._sentinel_of(res))
             parent_dev = jnp.stack([p for p, _ in rows])
             level_dev = jnp.stack([l for _, l in rows])
-            m_all = jnp.asarray([traversed_edges(
-                degree, BFSResult(parent=p, level=None, stats=None))
-                for p, _ in rows])
+            sent = (jnp.stack(sents)
+                    if all(s is not None for s in sents) else None)
 
+        m_all = jax.vmap(lambda p: traversed_edges(
+            degree, BFSResult(parent=p, level=None, stats=None))
+        )(parent_dev)
         m_np = np.asarray(m_all)
         ev = self.graph.ev
-        for i, r in enumerate(roots_np):
-            m, dt = int(m_np[i]), times[i]
-            g500.times_s.append(dt)
-            g500.edges.append(m)
-            g500.teps.append(m / dt if dt > 0 else 0.0)
-            if do_validate and ev is not None:
-                single = BFSResult(parent=parent_dev[i], level=level_dev[i],
-                                   stats=None)
-                g500.validated.append(
-                    bool(validate(ev, single, jnp.int32(int(r))).ok))
-        return Graph500Result(np.asarray(parent_dev), np.asarray(level_dev),
-                              g500, self.plan, self.mesh_axes)
+        g500.times_s = [float(dt) for dt in times]
+        g500.edges = [int(m) for m in m_np]
+        g500.teps = [m / dt if dt > 0 else 0.0
+                     for m, dt in zip(g500.edges, times)]
+
+        # --- check phase: one batched validation, no per-root loop ---
+        parent_np = np.array(parent_dev)    # writable: recovery patches rows
+        level_np = np.array(level_dev)
+        sent_np = (np.asarray(sent)
+                   if check == "full" and sent is not None else None)
+        counts: dict[str, int] = {}
+        failures: dict[int, list[str]] = {}
+        if check != "off" and ev is not None:
+            val = validate_batch(ev, parent_dev, level_dev, roots_np)
+            counts, failures = failure_report(val)
+        if sent_np is not None:
+            bad = np.any((sent_np != -1) & (sent_np != SENTINEL_OK), axis=-1)
+            counts["sentinel"] = int(np.sum(bad))
+            for i in np.nonzero(bad)[0]:
+                failures.setdefault(int(i), []).append("sentinel")
+        checked = bool(counts)      # some check actually ran
+        g500.check_counts = dict(counts)
+        g500.check_failures = {int(roots_np[i]): list(names)
+                               for i, names in failures.items()}
+
+        # --- recovery: retry -> degraded fallback -> quarantine ---
+        def attempt(idx, solver):
+            p2, l2, s2 = solver(roots_np[idx])
+            f2 = _recheck_rows(ev, p2, l2, roots_np[idx], check, s2)
+            for j, i in enumerate(idx):
+                i = int(i)
+                if j in f2:
+                    failures[i] = f2[j]
+                    continue
+                parent_np[i] = p2[j]
+                level_np[i] = l2[j]
+                m = int(traversed_edges(degree, BFSResult(
+                    parent=jnp.asarray(p2[j]), level=None, stats=None)))
+                g500.edges[i] = m
+                g500.teps[i] = (m / times[i] if times[i] > 0 else 0.0)
+                del failures[i]
+
+        if failures:
+            for _ in range(max(0, int(retries))):
+                if not failures:
+                    break
+                idx = sorted(failures)
+                g500.retries += len(idx)
+                attempt(idx, self._solve_roots)
+            if failures and fallback:
+                fb = self._fallback_compiled()
+                if fb is not None:
+                    idx = sorted(failures)
+                    g500.fallbacks += len(idx)
+                    attempt(idx, fb._solve_roots)
+        for i in sorted(failures):
+            g500.teps[i] = 0.0      # quarantined: excluded from the hmean
+            g500.quarantined.append(int(roots_np[i]))
+        if checked:
+            g500.validated = [i not in failures for i in range(n)]
+        return Graph500Result(parent_np, level_np, g500, self.plan,
+                              self.mesh_axes)
+
+
+def _recheck_rows(ev, parents, levels, roots, check, sent):
+    """Failure map (row index -> failed check names) for re-solved rows
+    during recovery — same checks as the first pass."""
+    failures: dict[int, list[str]] = {}
+    if ev is not None:
+        val = validate_batch(ev, jnp.asarray(parents), jnp.asarray(levels),
+                             np.asarray(roots, np.int32))
+        _, failures = failure_report(val)
+    if check == "full" and sent is not None:
+        bad = np.any((sent != -1) & (sent != SENTINEL_OK), axis=-1)
+        for j in np.nonzero(bad)[0]:
+            failures.setdefault(int(j), []).append("sentinel")
+    return failures

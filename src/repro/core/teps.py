@@ -56,6 +56,18 @@ class Graph500Run:
     edges: list[int] = field(default_factory=list)
     validated: list[bool] = field(default_factory=list)
     batched: bool = False   # True when produced by the one-jit batch harness
+    # Checked-execution bookkeeping (DESIGN.md §13).  ``check_counts``
+    # maps check name -> number of roots failing it at detection time
+    # (zeros included when checks ran; empty when check="off");
+    # ``check_failures`` maps failing root id -> failed check names.
+    # ``retries`` / ``fallbacks`` count roots re-solved per recovery
+    # stage; ``quarantined`` lists root ids still failing afterwards
+    # (their TEPS is forced to 0.0, excluding them from the hmean).
+    retries: int = 0
+    fallbacks: int = 0
+    quarantined: list[int] = field(default_factory=list)
+    check_counts: dict[str, int] = field(default_factory=dict)
+    check_failures: dict[int, list[str]] = field(default_factory=dict)
 
     @property
     def harmonic_mean_teps(self) -> float:

@@ -195,7 +195,9 @@ def enumerate_plans(n_devices: int, budget: TuneBudget) -> list:
 class TuneResult:
     """One candidate's outcome. ``status``: ``ok`` (accepted + timed),
     ``skipped`` (compile_plan ValueError), ``rejected`` (parents diverged
-    from the single-device oracle — never ranked)."""
+    from the single-device oracle — never ranked), ``failed`` (the
+    measurement itself raised — recorded with the exception string so
+    one crashing candidate never kills the sweep)."""
 
     plan: BFSPlan
     status: str
@@ -365,7 +367,14 @@ def sweep(
                        "engine — acceptance rule (DESIGN.md §11)"))
             log(f"# REJECT {key}: parents diverge")
             continue
-        wall = measure(compiled, roots, reps)
+        try:
+            wall = measure(compiled, roots, reps)
+        except Exception as e:   # a crashing candidate must not kill the sweep
+            report.skipped.append(TuneResult(
+                plan, "failed",
+                reason=f"measurement raised {type(e).__name__}: {e}"))
+            log(f"# FAIL {key}: {type(e).__name__}: {e}")
+            continue
         per_root = wall / len(roots)
         hmean = batch_harmonic_mean_teps(degree, parent, per_root)
         report.results.append(TuneResult(

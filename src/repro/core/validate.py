@@ -20,6 +20,11 @@ import jax.numpy as jnp
 from repro.core.bfs_steps import EdgeView
 from repro.core.hybrid_bfs import BFSResult
 
+#: Short names of the five spec checks, in Validation field order —
+#: the vocabulary used for failure attribution (``check_counts`` /
+#: ``check_failures`` on :class:`repro.core.teps.Graph500Run`).
+CHECK_NAMES = ("root", "depth", "tree_edge", "edge_level", "component")
+
 
 class Validation(NamedTuple):
     ok: jax.Array          # [] bool
@@ -73,3 +78,39 @@ def validate(ev: EdgeView, result: BFSResult, root: jax.Array) -> Validation:
 
     ok = root_ok & depth_ok & tree_edge_ok & edge_level_ok & component_ok
     return Validation(ok, root_ok, depth_ok, tree_edge_ok, edge_level_ok, component_ok)
+
+
+@jax.jit
+def validate_batch(ev: EdgeView, parents: jax.Array, levels: jax.Array,
+                   roots: jax.Array) -> Validation:
+    """All five spec checks for a ``[R, V]`` parent/level batch in ONE
+    vmapped program — every Validation leaf comes back ``[R]`` bool.
+
+    This replaces the old per-root host loop (one ``validate`` dispatch
+    and one device→host sync per root): one dispatch for the whole
+    batch, and per-check booleans per root for failure attribution.
+    """
+    return jax.vmap(
+        lambda p, l, r: validate(ev, BFSResult(parent=p, level=l,
+                                               stats=None), r)
+    )(parents, levels, jnp.asarray(roots, jnp.int32))
+
+
+def failure_report(val: Validation):
+    """Host-side attribution of a batched Validation.
+
+    Returns ``(counts, failures)``: ``counts`` maps every check name to
+    the number of roots failing it (zeros included, so the dict shape is
+    stable for BENCH metadata), ``failures`` maps each failing root
+    *index* to the list of check names it failed.
+    """
+    import numpy as np
+
+    per_check = {name: np.asarray(getattr(val, f"{name}_ok"))
+                 for name in CHECK_NAMES}
+    counts = {name: int(np.sum(~okv)) for name, okv in per_check.items()}
+    failures: dict[int, list[str]] = {}
+    for i in np.nonzero(~np.asarray(val.ok))[0]:
+        failures[int(i)] = [name for name in CHECK_NAMES
+                            if not per_check[name][i]]
+    return counts, failures

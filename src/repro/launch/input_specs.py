@@ -598,7 +598,7 @@ def graph500_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline") 
         SDS((), jnp.int32),                             # n_active
     )
     in_sh = (rep, shard0, shard0, shard0, shard0, shard0, shard0, rep)
-    out_sh = (shard0, shard0, rep)
+    out_sh = (shard0, shard0, rep, rep)  # parent, level, levels, sentinel
     flops = 2.0 * e_directed  # semiring "flops": one AND+OR per edge/level-ish
     return CellPlan(arch, shape, step, args, in_sh, out_sh, flops,
                     note=f"variant={variant};exchange={exchange}"
