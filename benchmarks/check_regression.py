@@ -16,10 +16,17 @@ baseline.  A rung pair only gates when its identity matches exactly:
   * interpret mode (a Mosaic-vs-interpret flip is a backend change, not
     a regression).
 
-Matched pairs fail the job when harmonic-mean TEPS drops by more than
-``--threshold`` (default 0.25, i.e. >25% slowdown).  Zero matched rungs
-is itself a failure: a renamed rung, a changed plan, or an unknown
-``--rungs`` filter must not let the gate pass vacuously.
+Matched pairs fail the job when their metric regresses past the
+threshold.  The metric direction is rung-typed: throughput rungs
+(``hmean_teps``, higher is better) fail on a >``--threshold`` drop
+(default 0.25, i.e. >25% slowdown); latency rungs from the serving
+bench (``p99_latency_s``, lower is better) fail on a
+>``--latency-threshold`` increase (default 0.50 — tail latency on a
+shared runner is noisier than throughput, so the gate is looser).  Zero
+matched rungs is itself a failure: a renamed rung, a changed plan, or
+an unknown ``--rungs`` filter must not let the gate pass vacuously.
+First-run serve rungs simply report as unmatched (not gated) until a
+baseline with them is committed.
 
 Plan dicts are compared after **default-filling**: a baseline recorded
 before a :class:`repro.core.plan.BFSPlan` field existed (e.g. the v2
@@ -43,6 +50,14 @@ import os
 import sys
 
 DEFAULT_THRESHOLD = 0.25
+DEFAULT_LATENCY_THRESHOLD = 0.50
+
+# metric name -> (direction, unit label); direction "higher" regresses on
+# a drop, "lower" on a rise
+METRICS = {
+    "hmean_teps": ("higher", "TEPS"),
+    "p99_latency_s": ("lower", "s p99"),
+}
 
 
 def _load(path: str) -> dict:
@@ -66,29 +81,32 @@ def normalize_plan(plan: dict, defaults: dict | None = None) -> dict:
 
 def collect_rungs(doc: dict, only_fresh: bool = False) -> dict:
     """Flatten a BENCH_bfs.json doc into ``name -> (plan, interpret,
-    harmonic_mean_teps)`` for every plan-carrying rung.
+    metric, value)`` for every plan-carrying rung.
 
     Covered: ``bfs_sharded`` ladder rungs (root_parallel /
     vertex_sharded / composed / tuned, per scale), ``version_ladder``
-    rungs, and ``bfs_single`` batch64 harnesses.  Engine rows without a
-    plan dict of their own never gate.  ``only_fresh`` restricts to
-    rungs the doc's own run produced (``modules_from_this_run`` +
-    per-scale ``rungs_from_this_run``).
+    rungs, ``bfs_single`` batch64 harnesses (all ``hmean_teps``), and
+    ``bfs_serve`` latency rungs (``p99_latency_s``).  Engine rows
+    without a plan dict of their own never gate.  ``only_fresh``
+    restricts to rungs the doc's own run produced
+    (``modules_from_this_run`` + per-scale ``rungs_from_this_run``).
     """
     out: dict = {}
     modules = doc.get("modules", {})
     fresh_modules = set(doc.get("modules_from_this_run", modules))
     doc_interp = doc.get("interpret_mode")
 
-    def add(name, rung, teps_key="harmonic_mean_teps", interp=None):
+    def add(name, rung, value_key="harmonic_mean_teps", interp=None,
+            metric="hmean_teps"):
         plan = rung.get("plan")
-        teps = rung.get(teps_key)
-        if plan is None or teps is None:
+        value = rung.get(value_key)
+        if plan is None or value is None:
             return
         out[name] = {
             "plan": plan,
             "interpret_mode": doc_interp if interp is None else interp,
-            "teps": float(teps),
+            "metric": metric,
+            "value": float(value),
         }
 
     sharded = modules.get("bfs_sharded", {})
@@ -141,33 +159,62 @@ def collect_rungs(doc: dict, only_fresh: bool = False) -> dict:
             if isinstance(batch, dict) and not batch.get("skipped"):
                 add(f"bfs_single/{scale_key}/batch64", batch,
                     interp=payload.get("interpret_mode"))
+
+    serve = modules.get("bfs_serve", {})
+    if not only_fresh or "bfs_serve" in fresh_modules:
+        latest = str(serve.get("latest_scale"))
+        for scale, payload in serve.get("by_scale", {}).items():
+            if only_fresh and str(scale) != latest:
+                continue
+            fresh = set(payload.get("rungs_from_this_run") or [])
+            interp = payload.get("interpret_mode")
+            for name, rung in payload.get("rungs", {}).items():
+                if not isinstance(rung, dict):
+                    continue
+                if only_fresh and name not in fresh:
+                    continue
+                add(f"bfs_serve/scale{scale}/{name}/p99", rung,
+                    value_key="latency_p99_s", interp=interp,
+                    metric="p99_latency_s")
     return out
 
 
-def compare(baseline: dict, current: dict, threshold: float) -> tuple:
+def compare(baseline: dict, current: dict, threshold: float,
+            latency_threshold: float = DEFAULT_LATENCY_THRESHOLD) -> tuple:
     """Return (regressions, matched, unmatched) over the flattened rung
     maps.  A pair matches when name + default-filled plan dict +
-    interpret mode agree; it regresses when current TEPS <
-    (1 - threshold) * baseline TEPS."""
+    interpret mode + metric agree; a ``hmean_teps`` rung regresses when
+    ``current < (1 - threshold) * baseline``, a ``p99_latency_s`` rung
+    when ``current > (1 + latency_threshold) * baseline``."""
     defaults = _plan_defaults()
     regressions, matched, unmatched = [], [], []
     for name, cur in sorted(current.items()):
         base = baseline.get(name)
+        base_metric = base.get("metric", "hmean_teps") if base else None
+        cur_metric = cur.get("metric", "hmean_teps")
         plans_differ = base is not None and (
             normalize_plan(base["plan"], defaults)
             != normalize_plan(cur["plan"], defaults))
         if (base is None or plans_differ
-                or base["interpret_mode"] != cur["interpret_mode"]):
+                or base["interpret_mode"] != cur["interpret_mode"]
+                or base_metric != cur_metric):
             why = ("missing from baseline" if base is None else
                    "plan dict changed" if plans_differ else
+                   "metric changed" if base_metric != cur_metric else
                    "interpret mode changed")
             unmatched.append((name, why))
             continue
-        ratio = cur["teps"] / base["teps"] if base["teps"] > 0 else \
+        direction, _ = METRICS.get(cur_metric, ("higher", cur_metric))
+        ratio = cur["value"] / base["value"] if base["value"] > 0 else \
             float("inf")
         matched.append((name, ratio))
-        if ratio < 1.0 - threshold:
-            regressions.append((name, ratio, base["teps"], cur["teps"]))
+        if direction == "higher":
+            if ratio < 1.0 - threshold:
+                regressions.append((name, ratio, base["value"],
+                                    cur["value"], cur_metric))
+        elif ratio > 1.0 + latency_threshold:
+            regressions.append((name, ratio, base["value"], cur["value"],
+                                cur_metric))
     return regressions, matched, unmatched
 
 
@@ -182,6 +229,12 @@ def main(argv=None) -> int:
                     default=float(os.environ.get("REGRESSION_THRESHOLD",
                                                  DEFAULT_THRESHOLD)),
                     help="fractional slowdown that fails (default 0.25)")
+    ap.add_argument("--latency-threshold", type=float,
+                    default=float(os.environ.get(
+                        "LATENCY_REGRESSION_THRESHOLD",
+                        DEFAULT_LATENCY_THRESHOLD)),
+                    help="fractional p99-latency increase that fails "
+                         "(default 0.50)")
     ap.add_argument("--all-rungs", action="store_true",
                     help="gate every rung in the current file, not just "
                          "the ones this run refreshed")
@@ -189,22 +242,26 @@ def main(argv=None) -> int:
 
     base = collect_rungs(_load(args.baseline))
     cur = collect_rungs(_load(args.current), only_fresh=not args.all_rungs)
-    regressions, matched, unmatched = compare(base, cur, args.threshold)
+    regressions, matched, unmatched = compare(base, cur, args.threshold,
+                                              args.latency_threshold)
 
     bad = {name for name, *_ in regressions}
     for name, why in unmatched:
         print(f"# unmatched (not gated): {name} — {why}")
     for name, ratio in matched:
         if name not in bad:
-            print(f"ok {name}: {ratio:.3f}x baseline TEPS")
+            print(f"ok {name}: {ratio:.3f}x baseline")
     if not matched:
         print("FAIL: no rung matched the baseline (name + plan dict + "
               "interpret mode) — the gate would be vacuous", file=sys.stderr)
         return 1
     if regressions:
-        for name, ratio, b, c in regressions:
-            print(f"REGRESSION {name}: {b:.3g} -> {c:.3g} TEPS "
-                  f"({ratio:.3f}x, threshold {1 - args.threshold:.2f}x)",
+        for name, ratio, b, c, metric in regressions:
+            direction, unit = METRICS.get(metric, ("higher", metric))
+            bound = (1 - args.threshold if direction == "higher"
+                     else 1 + args.latency_threshold)
+            print(f"REGRESSION {name}: {b:.3g} -> {c:.3g} {unit} "
+                  f"({ratio:.3f}x, threshold {bound:.2f}x)",
                   file=sys.stderr)
         return 1
     print(f"# gate passed: {len(matched)} rungs within "

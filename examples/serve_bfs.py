@@ -1,0 +1,78 @@
+"""BFS-as-a-service demo on 8 host devices (DESIGN.md §14).
+
+    PYTHONPATH=src python examples/serve_bfs.py
+
+One scale-12 graph, one persistent :class:`repro.serve.Engine` (plan
+resolved through TUNED_PLANS.json exactly like the offline tuned rung,
+falling back to the single-device batched plan), one deterministic
+Poisson x Zipf query trace streamed through the coalescer.  Prints the
+per-batch occupancy log and the p50/p99 latency summary, then asserts
+the serving acceptance invariants (every query answered, nonzero cache
+hits, all-zero check failure counts, answers bitwise-identical to the
+offline ``CompiledBFS.run`` oracle) — so this script is also the CI
+serving smoke.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+
+from repro.core.pipeline import Graph500Config, serve
+from repro.data.query_trace import synth_trace
+from repro.serve.engine import ServeConfig
+
+print(f"devices: {len(jax.devices())}")
+
+cfg = Graph500Config(scale=12, batched=True, tuned=True)
+serve_cfg = ServeConfig(batch_size=8, max_wait_s=0.05, cache_capacity=64,
+                        check="post")
+built, engine = serve(cfg, serve_cfg=serve_cfg)
+print(f"graph: {built.n_vertices} vertices, {built.nnz} directed edges")
+print(f"plan: layout={engine.plan.layout} mesh={engine.plan.mesh_shape} "
+      f"exchange={engine.plan.exchange} partition={engine.plan.partition}")
+
+# hot-headed trace: 48 queries, Poisson arrivals at 2 qps (virtual),
+# Zipf-1.4 popularity over the degree-sorted ids (low ids = hubs)
+trace = synth_trace(7, 48, built.n_vertices, rate_qps=2.0, zipf_s=1.4,
+                    degree=np.asarray(built.degree))
+report = engine.serve(trace)
+
+print(f"{'batch':>5s} {'launch_s':>9s} {'service_s':>9s} {'roots':>5s} "
+      f"{'pad':>3s} {'queries':>7s} {'occupancy':>9s} {'wait_ms':>8s}")
+for b in report.batches:
+    print(f"{b.seq:5d} {b.t_launch:9.3f} {b.service_s:9.3f} "
+          f"{b.n_roots:5d} {b.n_pad:3d} {b.n_queries:7d} "
+          f"{b.occupancy:9.2f} {b.oldest_wait_s * 1e3:8.1f}")
+
+s = report.summary()
+print(f"latency: p50={s['latency_p50_s'] * 1e3:.2f}ms "
+      f"p99={s['latency_p99_s'] * 1e3:.2f}ms "
+      f"p999={s['latency_p999_s'] * 1e3:.2f}ms "
+      f"max={s['latency_max_s'] * 1e3:.2f}ms")
+print(f"throughput: {s['qps']:.2f} queries/s over {s['n_batches']} batches "
+      f"(mean occupancy {s['occupancy_mean']:.2f}, "
+      f"padding {s['padding_fraction']:.2f})")
+print(f"kinds: {s['kinds']}")
+print(f"cache: {s['cache']}")
+print(f"check_counts: {s['check_counts']}")
+
+# --- serving acceptance invariants (CI-consumed) ------------------------
+assert s["n_queries"] == 48, "every query must be answered exactly once"
+assert "failed" not in s["kinds"], s["kinds"]
+assert s["cache"]["hits"] > 0, "a Zipf trace must produce cache hits"
+assert all(v == 0 for v in s["check_counts"].values()), s["check_counts"]
+assert np.isfinite(s["latency_p99_s"]) and s["latency_p99_s"] > 0
+
+# every answer — hit or miss — bitwise-identical to the offline oracle
+uniq = sorted({a.root for a in report.answers})
+res = engine.compiled.run(np.asarray(uniq, np.int32), warmup=False,
+                          check="post")
+idx = {r: i for i, r in enumerate(uniq)}
+for a in report.answers:
+    assert np.array_equal(a.parent, res.parent[idx[a.root]]), a.root
+    assert np.array_equal(a.level, res.level[idx[a.root]]), a.root
+print(f"bitwise parity: {len(report.answers)} answers == offline run "
+      f"over {len(uniq)} unique roots")
+print("OK")

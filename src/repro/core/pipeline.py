@@ -204,3 +204,25 @@ def run(cfg: Graph500Config, built: BuiltGraph | None = None) -> tuple[BuiltGrap
     compiled = compile_plan(cfg.to_plan(), built)
     return built, compiled.run(roots, check=cfg.check, retries=cfg.retries,
                                fallback=cfg.fallback).run
+
+
+def serve(cfg: Graph500Config, serve_cfg=None,
+          built: BuiltGraph | None = None, fault=None):
+    """Stand up the persistent serving engine on this config's graph and
+    plan (DESIGN.md §14): build once, compile once, returns
+    ``(built, engine)`` — feed traces to ``engine.serve``.
+
+    ``serve_cfg`` is a :class:`repro.serve.engine.ServeConfig` (defaults
+    apply when None).  The traversal plan comes from :meth:`Graph500Config
+    .to_plan` — so ``tuned=True`` resolves TUNED_PLANS.json exactly like
+    the offline path — with ``batch_roots`` forced on by the engine.
+    ``cfg.check``/``cfg.retries`` seed the serving-side defaults unless
+    ``serve_cfg`` overrides them.
+    """
+    from repro.serve.engine import Engine, ServeConfig
+
+    built = built or build(cfg)
+    if serve_cfg is None:
+        serve_cfg = ServeConfig(check=cfg.check, retries=cfg.retries)
+    engine = Engine(built, plan=cfg.to_plan(), config=serve_cfg, fault=fault)
+    return built, engine

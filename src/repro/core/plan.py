@@ -197,6 +197,19 @@ class ShardedRun(NamedTuple):
     sentinel: Any = None  # [..., max_levels] int32 in-loop sentinel masks
 
 
+class ServeBatch(NamedTuple):
+    """Checked, untimed solve of one root batch for the serving engine
+    (DESIGN.md §14): global-order stripped numpy rows plus the detection
+    report.  No TEPS / wall-clock bookkeeping — the server owns the
+    clock; ``failures`` maps batch-row index → failed check names for
+    the rows still failing after any retry/fallback recovery."""
+
+    parent: np.ndarray          # [B, V] int32
+    level: np.ndarray           # [B, V] int32
+    counts: dict                # check name -> failing rows at detection
+    failures: dict              # row index -> failed check names (final)
+
+
 @dataclass
 class Graph500Result:
     """Uniform runner output, whatever the plan layout.
@@ -859,16 +872,8 @@ class CompiledBFS:
         level_np = np.array(level_dev)
         sent_np = (np.asarray(sent)
                    if check == "full" and sent is not None else None)
-        counts: dict[str, int] = {}
-        failures: dict[int, list[str]] = {}
-        if check != "off" and ev is not None:
-            val = validate_batch(ev, parent_dev, level_dev, roots_np)
-            counts, failures = failure_report(val)
-        if sent_np is not None:
-            bad = np.any((sent_np != -1) & (sent_np != SENTINEL_OK), axis=-1)
-            counts["sentinel"] = int(np.sum(bad))
-            for i in np.nonzero(bad)[0]:
-                failures.setdefault(int(i), []).append("sentinel")
+        counts, failures = _check_batch(ev, parent_dev, level_dev, roots_np,
+                                        check, sent_np)
         checked = bool(counts)      # some check actually ran
         g500.check_counts = dict(counts)
         g500.check_failures = {int(roots_np[i]): list(names)
@@ -912,17 +917,87 @@ class CompiledBFS:
         return Graph500Result(parent_np, level_np, g500, self.plan,
                               self.mesh_axes)
 
+    def serve_batch(self, roots, *, check: str = "post", retries: int = 0,
+                    fallback: bool = False) -> ServeBatch:
+        """One checked, untimed root-batch solve — the serving primitive
+        (DESIGN.md §14).
+
+        The same detect → retry → degraded-fallback machinery as
+        :meth:`run`, minus the Graph500 harness bookkeeping (warmup,
+        wall-clock attribution, TEPS, quarantine): the serving engine
+        owns the clock and the recovery *policy* — rows still failing
+        come back in ``failures`` so the caller re-queues them instead
+        of accepting a wrong tree.  Rows are in batch order; padding
+        slots the caller added are its own to mask.
+        """
+        if check not in ("off", "post", "full"):
+            raise ValueError(
+                f"check must be 'off', 'post' or 'full' (got {check!r})")
+        roots_np = np.asarray(roots, np.int32).reshape(-1)
+        if roots_np.size == 0:
+            v = self.num_vertices
+            return ServeBatch(np.zeros((0, v), np.int32),
+                              np.zeros((0, v), np.int32), {}, {})
+        ev = self.graph.ev
+        p, l, sent = self._solve_roots(roots_np)
+        parent_np = np.array(p)     # writable: recovery patches rows
+        level_np = np.array(l)
+        sent_np = sent if check == "full" and sent is not None else None
+        counts, failures = _check_batch(ev, parent_np, level_np, roots_np,
+                                        check, sent_np)
+
+        def attempt(idx, solver):
+            p2, l2, s2 = solver(roots_np[idx])
+            f2 = _recheck_rows(ev, p2, l2, roots_np[idx], check, s2)
+            for j, i in enumerate(idx):
+                i = int(i)
+                if j in f2:
+                    failures[i] = f2[j]
+                    continue
+                parent_np[i] = p2[j]
+                level_np[i] = l2[j]
+                del failures[i]
+
+        if failures:
+            for _ in range(max(0, int(retries))):
+                if not failures:
+                    break
+                attempt(sorted(failures), self._solve_roots)
+            if failures and fallback:
+                fb = self._fallback_compiled()
+                if fb is not None:
+                    attempt(sorted(failures), fb._solve_roots)
+        return ServeBatch(parent_np, level_np, counts, failures)
+
+
+def _check_batch(ev, parents, levels, roots, check, sent):
+    """Detection pass shared by :meth:`CompiledBFS.run`,
+    :meth:`CompiledBFS.serve_batch` and the recovery rechecks.
+
+    Returns ``(counts, failures)``: per-check failure counts (zeros
+    included whenever the spec checks ran — the stable BENCH shape) and
+    a row-index → failed-check-names map.  ``sent`` is the per-row
+    in-loop sentinel trace, applied only under ``check="full"``.
+    """
+    counts: dict[str, int] = {}
+    failures: dict[int, list[str]] = {}
+    if check != "off" and ev is not None:
+        val = validate_batch(ev, jnp.asarray(parents), jnp.asarray(levels),
+                             np.asarray(roots, np.int32))
+        counts, failures = failure_report(val)
+    if check == "full" and sent is not None:
+        sent = np.asarray(sent)
+        bad = np.any((sent != -1) & (sent != SENTINEL_OK), axis=-1)
+        counts["sentinel"] = int(np.sum(bad))
+        for j in np.nonzero(bad)[0]:
+            failures.setdefault(int(j), []).append("sentinel")
+    return counts, failures
+
 
 def _recheck_rows(ev, parents, levels, roots, check, sent):
     """Failure map (row index -> failed check names) for re-solved rows
     during recovery — same checks as the first pass."""
-    failures: dict[int, list[str]] = {}
-    if ev is not None:
-        val = validate_batch(ev, jnp.asarray(parents), jnp.asarray(levels),
-                             np.asarray(roots, np.int32))
-        _, failures = failure_report(val)
-    if check == "full" and sent is not None:
-        bad = np.any((sent != -1) & (sent != SENTINEL_OK), axis=-1)
-        for j in np.nonzero(bad)[0]:
-            failures.setdefault(int(j), []).append("sentinel")
-    return failures
+    # the first pass runs the spec checks whenever check != "off", so the
+    # recheck must too (sent gating stays inside _check_batch)
+    return _check_batch(ev, parents, levels, roots, check,
+                        sent if check == "full" else None)[1]

@@ -1,3 +1,3 @@
-from repro.data import graphs, sampler, synthetic
+from repro.data import graphs, query_trace, sampler, synthetic
 
-__all__ = ["graphs", "sampler", "synthetic"]
+__all__ = ["graphs", "query_trace", "sampler", "synthetic"]

@@ -1,0 +1,32 @@
+"""BFS-as-a-service: the persistent serving subsystem (DESIGN.md §14).
+
+Layering:
+
+  ``cache``      hot-root parent LRU (bitwise-exact hits)
+  ``coalescer``  deterministic double-buffered query → root-batch replay
+  ``metrics``    latency percentiles / qps / occupancy report
+  ``engine``     resident compiled plan + checked batch solver
+
+The coalescer and metrics are pure host code (no jax import) so the
+packing policy is unit-testable without devices; only ``engine`` touches
+the compiled stack.
+"""
+from repro.serve.cache import CachedAnswer, ParentCache
+from repro.serve.coalescer import (Answer, BatchOutcome, BatchRecord,
+                                   CoalescePolicy, Query, replay)
+from repro.serve.metrics import ServeReport
+
+__all__ = [
+    "Answer", "BatchOutcome", "BatchRecord", "CachedAnswer",
+    "CoalescePolicy", "Engine", "ParentCache", "Query", "ServeConfig",
+    "ServeReport", "replay", "resolve_serve_plan",
+]
+
+
+def __getattr__(name):
+    # Engine pulls in jax via core.plan; keep the host-only pieces
+    # importable without it (mirrors core/__init__'s lazy tune exports).
+    if name in ("Engine", "ServeConfig", "resolve_serve_plan"):
+        from repro.serve import engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

@@ -143,3 +143,78 @@ def test_old_baseline_vs_old_current_unaffected():
                         only_fresh=True)
     _, matched, unmatched = compare(base, cur, 0.25)
     assert len(matched) == 1 and not unmatched
+
+
+def _serve_doc(plan_dict, p99=0.5, rungs=("serve_steady",)):
+    return {
+        "interpret_mode": True,
+        "modules_from_this_run": ["bfs_serve"],
+        "modules": {
+            "bfs_serve": {
+                "latest_scale": 12,
+                "by_scale": {
+                    "12": {
+                        "interpret_mode": True,
+                        "rungs_from_this_run": list(rungs),
+                        "rungs": {
+                            name: {"plan": copy.deepcopy(plan_dict),
+                                   "latency_p99_s": p99}
+                            for name in rungs
+                        },
+                    },
+                },
+            },
+        },
+    }
+
+
+def test_latency_rung_gates_lower_is_better():
+    """Satellite: serve rungs gate on p99 latency with the direction
+    INVERTED — a p99 increase past the latency threshold fails, a
+    decrease never does (it would be a 'regression' under the TEPS
+    rule)."""
+    plan = BFSPlan(layout=(), batch_roots=True).to_dict()
+    base = collect_rungs(_serve_doc(plan, p99=1.0))
+    assert base == {"bfs_serve/scale12/serve_steady/p99": {
+        "plan": plan, "interpret_mode": True,
+        "metric": "p99_latency_s", "value": 1.0}}
+    # 20% slower p99: within the 50% latency threshold
+    cur = collect_rungs(_serve_doc(plan, p99=1.2), only_fresh=True)
+    regressions, matched, unmatched = compare(base, cur, 0.25, 0.5)
+    assert len(matched) == 1 and not regressions and not unmatched
+    # 80% slower p99: fails
+    cur = collect_rungs(_serve_doc(plan, p99=1.8), only_fresh=True)
+    regressions, _, _ = compare(base, cur, 0.25, 0.5)
+    assert len(regressions) == 1
+    name, ratio, b, c, metric = regressions[0]
+    assert metric == "p99_latency_s" and (b, c) == (1.0, 1.8)
+    # 4x FASTER p99 must pass (lower is better — the TEPS rule would
+    # have called this a 0.25x regression)
+    cur = collect_rungs(_serve_doc(plan, p99=0.25), only_fresh=True)
+    regressions, matched, _ = compare(base, cur, 0.25, 0.5)
+    assert len(matched) == 1 and not regressions
+
+
+def test_first_run_serve_rung_unmatched_not_gated():
+    """Satellite: a serve rung absent from the committed baseline (the
+    first run after this subsystem lands) reports as unmatched — it
+    must neither fail nor count toward the vacuity check."""
+    plan = BFSPlan(layout=(), batch_roots=True).to_dict()
+    base = collect_rungs(_doc(plan, teps=1000.0))     # sharded-only baseline
+    cur = collect_rungs(_serve_doc(plan), only_fresh=True)
+    regressions, matched, unmatched = compare(base, cur, 0.25, 0.5)
+    assert not regressions and not matched
+    assert unmatched == [("bfs_serve/scale12/serve_steady/p99",
+                          "missing from baseline")]
+
+
+def test_serve_rung_default_fills_plan_like_teps_rungs():
+    """The default-fill plan matching applies to latency rungs too: a
+    baseline recorded before a plan field existed still gates."""
+    old_plan = BFSPlan(layout=(), batch_roots=True).to_dict()
+    old_plan.pop("partition")
+    new_plan = BFSPlan(layout=(), batch_roots=True).to_dict()
+    base = collect_rungs(_serve_doc(old_plan, p99=1.0))
+    cur = collect_rungs(_serve_doc(new_plan, p99=1.1), only_fresh=True)
+    regressions, matched, unmatched = compare(base, cur, 0.25, 0.5)
+    assert len(matched) == 1 and not unmatched and not regressions
