@@ -33,7 +33,6 @@ from __future__ import annotations
 
 import json
 import os
-import subprocess
 import sys
 
 from benchmarks.common import row, rung_filter
@@ -151,14 +150,12 @@ def selected_rungs() -> set:
 
 def run():
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(repo, "src"), repo]
-        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.bfs_serve", "--child"],
-        capture_output=True, text=True, env=env, cwd=repo, timeout=7200)
+    from repro.util import respawn_with_host_devices
+
+    proc = respawn_with_host_devices(
+        [sys.executable, "-m", "benchmarks.bfs_serve", "--child"], 8,
+        pythonpath=(os.path.join(repo, "src"), repo),
+        capture=True, cwd=repo, timeout=7200)
     if proc.returncode != 0:
         raise RuntimeError(f"serve benchmark child failed:\n"
                            f"{proc.stderr[-4000:]}")

@@ -53,7 +53,6 @@ from __future__ import annotations
 
 import json
 import os
-import subprocess
 import sys
 import time
 
@@ -65,6 +64,14 @@ _PAYLOAD: dict = {}
 ROOT_SHAPES = (1, 2, 4, 8)
 VERTEX_SHAPES = ((2, 1), (2, 2), (4, 2))
 COMPOSED_SHAPES = ((2, 2, 2),)
+# Multi-process rungs (DESIGN.md §15): REAL cross-process exchange via
+# repro.launch.multiprocess — run only when named in BENCH_RUNGS or when
+# BENCH_MP=1 (each one spawns a worker gang; too heavy for the default
+# sweep).  ``mp_2x4`` = 2 processes x 4 devices each; same 8-device
+# global mesh as the single-process "4x2"-family rungs but the
+# inter-group leg crosses process wire, so ``exchange_seconds`` is
+# measured transfer time, not memcpy.
+MP_RUNGS = ("mp_2x4", "mp_4x2")
 
 
 def json_payload() -> dict:
@@ -344,7 +351,8 @@ def _fold_by_scale(payload: dict, repo: str) -> dict:
     ``rungs_from_this_run`` — the regression gate compares only those."""
     fresh = sorted(
         set(payload["root_parallel"]) | set(payload["vertex_sharded"])
-        | set(payload["composed"]) | set(payload["tuned"]))
+        | set(payload["composed"]) | set(payload["tuned"])
+        | set(payload.get("multiprocess", {})))
     payload["rungs_from_this_run"] = fresh
     scale_key = str(payload["scale"])
     try:
@@ -359,7 +367,7 @@ def _fold_by_scale(payload: dict, repo: str) -> dict:
     if rung_filter() is not None and scale_key in by_scale:
         old = by_scale[scale_key]
         for key in ("root_parallel", "vertex_sharded", "composed", "tuned",
-                    "mesh_ladder"):
+                    "multiprocess", "mesh_ladder"):
             merged = dict(old.get(key, {}))
             merged.update(payload.get(key, {}))
             payload[key] = merged
@@ -376,16 +384,70 @@ def selected_rungs() -> set:
     return set(_SELECTED)
 
 
+def _parse_mp_rung(name: str):
+    """``mp_<P>x<D>[<exchange suffix>][_cyc]`` → (procs, dpp, exchange,
+    partition); raises on anything else (run.py's unknown-rung check)."""
+    from repro.launch.multiprocess import EXCHANGE_SUFFIX
+
+    body = name[len("mp_"):]
+    partition = "block"
+    if body.endswith("_cyc"):
+        partition, body = "word_cyclic", body[:-len("_cyc")]
+    exchange = "hier_or"
+    for e, suf in EXCHANGE_SUFFIX.items():
+        if suf and body.endswith(suf):
+            exchange, body = e, body[:-len(suf)]
+            break
+    procs, dpp = (int(x) for x in body.split("x"))
+    return procs, dpp, exchange, partition
+
+
+def _run_mp_rungs(scale: int) -> dict:
+    """The multiprocess section: one launcher gang per (procs x dpp)
+    grouping of the selected ``mp_*`` rungs (exchange/partition variants
+    of the same topology share one gang — one graph build, one
+    rendezvous)."""
+    want = rung_filter()
+    if want is not None:
+        names = sorted(n for n in want if n.startswith("mp_"))
+    elif os.environ.get("BENCH_MP") == "1":
+        names = list(MP_RUNGS)
+    else:
+        return {}
+    if not names:
+        return {}
+    from repro.launch.multiprocess import launch, rung_name
+
+    n_roots = int(os.environ.get("BENCH_MP_ROOTS", "8"))
+    reps = int(os.environ.get("BENCH_MP_REPS", "3"))
+    log_base = os.environ.get("BENCH_MP_LOG_DIR")  # CI uploads on failure
+    by_topo: dict = {}
+    for name in names:
+        procs, dpp, exchange, partition = _parse_mp_rung(name)
+        by_topo.setdefault((procs, dpp), []).append((exchange, partition))
+    out: dict = {}
+    for (procs, dpp), cases in sorted(by_topo.items()):
+        exchanges = ",".join(sorted({e for e, _ in cases}))
+        partitions = ",".join(sorted({p for _, p in cases}))
+        payload = launch(procs, dpp, scale=scale, n_roots=n_roots,
+                         exchanges=exchanges, partitions=partitions,
+                         reps=reps,
+                         log_dir=(os.path.join(log_base, f"{procs}x{dpp}")
+                                  if log_base else None))
+        for exchange, partition in cases:
+            out[rung_name(procs, dpp, exchange, partition)] = (
+                payload["rungs"][rung_name(procs, dpp, exchange, partition)])
+    return out
+
+
 def run():
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(repo, "src"), repo]
-        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.bfs_sharded", "--child"],
-        capture_output=True, text=True, env=env, cwd=repo, timeout=7200)
+    from repro.util import respawn_with_host_devices
+
+    proc = respawn_with_host_devices(
+        [sys.executable, "-m", "benchmarks.bfs_sharded", "--child"], 8,
+        pythonpath=(os.path.join(repo, "src"), repo),
+        capture=True, cwd=repo, timeout=7200)
     if proc.returncode != 0:
         raise RuntimeError(f"sharded benchmark child failed:\n"
                            f"{proc.stderr[-4000:]}")
@@ -396,11 +458,25 @@ def run():
     if payload is None:
         raise RuntimeError(f"no payload marker in child stdout:\n"
                            f"{proc.stdout[-2000:]}")
+    # mp rungs run from THIS process — the launcher owns the worker
+    # gang's device views; the 8-device child never sees them
+    payload["multiprocess"] = _run_mp_rungs(payload["scale"])
     _SELECTED.clear()
     _SELECTED.update(payload.get("rungs_matched", []))
+    _SELECTED.update(payload["multiprocess"])
     _PAYLOAD.update(_fold_by_scale(payload, repo))
 
     rows = []
+    for name, rung in payload["multiprocess"].items():
+        exch = rung.get("exchange_seconds") or {}
+        rows.append(row(
+            f"bfs_sharded/scale{payload['scale']}/{name}",
+            rung["per_root_us"],
+            f"layer=multiprocess;procs={rung['procs']};"
+            f"hmean_GTEPS={rung['harmonic_mean_teps'] / 1e9:.5f};"
+            f"identical={rung['identical']};"
+            f"exchange_s={exch.get('total_seconds', float('nan')):.4f};"
+            f"wire_inter={rung['wire_bytes']['totals']['inter_raw']}B"))
     for name, rung in payload["mesh_ladder"].items():
         rows.append(row(
             f"bfs_sharded/scale{payload['scale']}/mesh{name}",

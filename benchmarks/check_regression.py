@@ -121,8 +121,12 @@ def collect_rungs(doc: dict, only_fresh: bool = False) -> dict:
                 continue
             fresh = set(payload.get("rungs_from_this_run") or [])
             interp = payload.get("interpret_mode")
+            # First-run mp_* rungs are unmatched in the committed
+            # baseline and therefore reported-not-gated (the same
+            # policy PR 8 used for serve rungs) — they start gating
+            # once a baseline BENCH_bfs.json records them.
             for layer in ("root_parallel", "vertex_sharded", "composed",
-                          "tuned"):
+                          "tuned", "multiprocess"):
                 rungs = payload.get(layer, {})
                 if not isinstance(rungs, dict):
                     continue

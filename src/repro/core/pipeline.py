@@ -84,6 +84,15 @@ class Graph500Config:
     check: str = "post"
     retries: int = 0
     fallback: bool = False
+    # Multi-process runtime (DESIGN.md §15): procs > 1 hands ``run`` to
+    # ``repro.launch.multiprocess`` — one real JAX process per "node"
+    # over localhost TCP, the group axis pinned to the process boundary,
+    # so the inter-group exchange leg crosses real process wire.
+    # ``devices_per_proc`` sizes each worker's forced-host-device view
+    # (None → 1).  Only ``run`` honors these; ``serve`` stays
+    # single-process.
+    procs: int = 1
+    devices_per_proc: Optional[int] = None
 
     @staticmethod
     def ladder(rung: str, **kw) -> "Graph500Config":
@@ -195,7 +204,17 @@ def build(cfg: Graph500Config) -> BuiltGraph:
 
 
 def run(cfg: Graph500Config, built: BuiltGraph | None = None) -> tuple[BuiltGraph, Graph500Run]:
-    """Steps 3-4: compile the config's plan and run the timed harness."""
+    """Steps 3-4: compile the config's plan and run the timed harness.
+
+    ``cfg.procs > 1`` delegates to the multi-process launcher: the
+    traversal runs on ``procs`` real JAX processes (rank 0's
+    :class:`Graph500Run` comes back through the launcher payload)
+    instead of in this process's device view.
+    """
+    if cfg.procs > 1:
+        from repro.launch.multiprocess import run_config
+
+        return run_config(cfg, built)
     built = built or build(cfg)
     edges = kronecker.generate_edges(cfg.seed, cfg.scale, cfg.edge_factor)
     roots = kronecker.sample_roots(cfg.seed, edges, cfg.n_roots)

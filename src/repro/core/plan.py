@@ -353,8 +353,20 @@ def _resolve_mesh(plan: BFSPlan, mesh, axis_names):
     shape = plan.mesh_shape
     if shape is None:
         from repro.comms.topology import plan_device_mesh
+        n_procs = jax.process_count()
         if plan.layout == ("root",):
             shape = (n_avail,)
+        elif n_procs > 1:
+            # Process-mesh resolution (DESIGN.md §15): under a
+            # multi-process runtime the group axis is aligned to the
+            # process boundary — each "node" (process) is one monitor
+            # group, its local devices the members — so the inter-group
+            # leg of the two-phase collectives is exactly the
+            # cross-process (real-wire) leg.  jax.devices() orders
+            # devices process-major, so the plain reshape realizes it.
+            vshape = (n_procs, n_avail // n_procs)
+            shape = (vshape if plan.layout == ("group", "member")
+                     else (1,) + vshape)
         elif plan.layout == ("group", "member"):
             shape = plan_device_mesh(n_avail)
         else:  # composed 3-axis: one root lane over the planned vertex mesh
@@ -378,6 +390,15 @@ def _resolve_mesh(plan: BFSPlan, mesh, axis_names):
 
 def _role_size(mesh, name) -> int:
     return math.prod(int(mesh.shape[a]) for a in _axis_tuple(name))
+
+
+def mesh_process_count(mesh) -> int:
+    """Number of distinct JAX processes owning the mesh's devices (1 for
+    any single-process mesh, whatever the fake-device count)."""
+    if mesh is None:
+        return 1
+    return len({getattr(d, "process_index", 0)
+                for d in np.asarray(mesh.devices).flat})
 
 
 def _prepare(built, plan: BFSPlan, n_dev_vertex: int) -> PreparedGraph:
@@ -662,6 +683,20 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
 
         v_orig = sg.v_orig
 
+    if mesh_process_count(mesh) > 1:
+        # Cross-process mesh (DESIGN.md §15): the raw program's outputs
+        # are sharded over devices this process cannot address, so one
+        # extra jitted reshard (an XLA all-gather over the real wire)
+        # replicates them — every rank then holds the full parent/level
+        # arrays addressably and the runner/validation/TEPS machinery
+        # below works unchanged on every rank.
+        from jax.sharding import NamedSharding
+        rep = jax.jit(lambda t: t, out_shardings=NamedSharding(mesh, P()))
+        inner_raw = raw
+
+        def raw(roots):
+            return rep(inner_raw(roots))
+
     return CompiledBFS(
         plan=plan, mesh=mesh, graph=pg, num_vertices=v_orig,
         _raw=raw, _vertexy=vertexy, _root_axis_size=root_axis_size,
@@ -857,9 +892,15 @@ class CompiledBFS:
             sent = (jnp.stack(sents)
                     if all(s is not None for s in sents) else None)
 
+        # Host copies up front: writable (recovery patches rows), and the
+        # TEPS/validation dispatches below must take process-local inputs
+        # — a cross-process replicated output is readable here but cannot
+        # be mixed with this rank's local arrays inside one jit.
+        parent_np = np.array(parent_dev)
+        level_np = np.array(level_dev)
         m_all = jax.vmap(lambda p: traversed_edges(
             degree, BFSResult(parent=p, level=None, stats=None))
-        )(parent_dev)
+        )(parent_np)
         m_np = np.asarray(m_all)
         ev = self.graph.ev
         g500.times_s = [float(dt) for dt in times]
@@ -868,11 +909,9 @@ class CompiledBFS:
                      for m, dt in zip(g500.edges, times)]
 
         # --- check phase: one batched validation, no per-root loop ---
-        parent_np = np.array(parent_dev)    # writable: recovery patches rows
-        level_np = np.array(level_dev)
         sent_np = (np.asarray(sent)
                    if check == "full" and sent is not None else None)
-        counts, failures = _check_batch(ev, parent_dev, level_dev, roots_np,
+        counts, failures = _check_batch(ev, parent_np, level_np, roots_np,
                                         check, sent_np)
         checked = bool(counts)      # some check actually ran
         g500.check_counts = dict(counts)

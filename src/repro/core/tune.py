@@ -53,7 +53,6 @@ import itertools
 import json
 import math
 import os
-import subprocess
 import sys
 import time
 from dataclasses import dataclass, field
@@ -521,11 +520,8 @@ def tuned_exchange(scale: int, n_devices: Optional[int] = None,
 def _respawn_with_devices(n: int, args) -> int:
     """Re-exec the sweep in a child with ``n`` forced host devices (the
     parent's JAX is already initialized with its own device view)."""
-    env = dict(os.environ)
-    flags = [f for f in env.get("XLA_FLAGS", "").split()
-             if not f.startswith("--xla_force_host_platform_device_count")]
-    flags.append(f"--xla_force_host_platform_device_count={n}")
-    env["XLA_FLAGS"] = " ".join(flags)
+    from repro.util import respawn_with_host_devices
+
     child = [sys.executable, "-m", "repro.core.tune",
              "--scale", str(args.scale), "--budget", args.budget,
              "--seed", str(args.seed)]
@@ -535,7 +531,7 @@ def _respawn_with_devices(n: int, args) -> int:
             child += [flag, str(val)]
     if args.no_save:
         child.append("--no-save")
-    return subprocess.call(child, env=env)
+    return respawn_with_host_devices(child, n).returncode
 
 
 def main(argv: Optional[list] = None) -> int:

@@ -5,4 +5,14 @@ XLA_FLAGS for 512 host devices at import time (by design, per spec).
 """
 from repro.launch import mesh
 
-__all__ = ["mesh"]
+__all__ = ["mesh", "multiprocess"]
+
+
+def __getattr__(name):
+    # multiprocess imported lazily: the worker path must configure gloo
+    # collectives before any jax backend touch, so keep this module's
+    # import side-effect-free for it.
+    if name == "multiprocess":
+        from repro.launch import multiprocess
+        return multiprocess
+    raise AttributeError(name)

@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import subprocess
 
 import jax
 
@@ -70,6 +72,64 @@ def make_mesh(shape, axis_names):
         import numpy as np
         return jax.sharding.Mesh(np.asarray(devices).reshape(shape),
                                  axis_names)
+
+
+def host_device_env(n_devices: int, *, extra_env: dict | None = None,
+                    pythonpath=()) -> dict:
+    """A child-process environment forcing ``n_devices`` XLA host devices.
+
+    The ONE copy of the XLA_FLAGS surgery every "respawn with N fake
+    devices" caller used to hand-roll: any existing
+    ``--xla_force_host_platform_device_count`` flag is replaced (never
+    appended after) so the child's device view is exactly ``n_devices``
+    whatever the parent's was.  ``pythonpath`` entries are *prepended* to
+    the inherited ``PYTHONPATH``; ``extra_env`` is applied last so a
+    caller can still override anything (including XLA_FLAGS itself).
+    """
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={int(n_devices)}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    if isinstance(pythonpath, (str, bytes)):
+        pythonpath = (pythonpath,)
+    if pythonpath:
+        entries = [str(p) for p in pythonpath]
+        if env.get("PYTHONPATH"):
+            entries.append(env["PYTHONPATH"])
+        env["PYTHONPATH"] = os.pathsep.join(entries)
+    env.update(extra_env or {})
+    return env
+
+
+def respawn_with_host_devices(argv, n_devices: int, *,
+                              extra_env: dict | None = None,
+                              pythonpath=(), capture: bool = False,
+                              timeout: float | None = None, cwd=None,
+                              background: bool = False,
+                              stdout=None, stderr=None):
+    """Run ``argv`` in a child process seeing ``n_devices`` forced XLA
+    host devices (the parent's JAX keeps its own device view).
+
+    The shared respawn machinery behind the tuner's ``--devices N``
+    re-exec, the sharded/serve benchmark children, the subprocess test
+    harnesses and the multi-process launcher's worker bring-up:
+
+      * ``background=False`` (default) — blocking ``subprocess.run``;
+        returns the ``CompletedProcess`` (``capture=True`` for
+        text-mode captured stdout/stderr, ``timeout`` in seconds).
+      * ``background=True`` — non-blocking ``subprocess.Popen`` with the
+        given ``stdout``/``stderr`` handles; returns the ``Popen`` (the
+        multi-process launcher spawns one per rank and owns the
+        wait/kill policy).
+    """
+    env = host_device_env(n_devices, extra_env=extra_env,
+                          pythonpath=pythonpath)
+    if background:
+        return subprocess.Popen(list(argv), env=env, cwd=cwd,
+                                stdout=stdout, stderr=stderr, text=True)
+    return subprocess.run(list(argv), env=env, cwd=cwd,
+                          capture_output=capture, text=True, timeout=timeout)
 
 
 def pytree_dataclass(cls=None, *, meta: tuple[str, ...] = ()):

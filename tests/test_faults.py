@@ -16,7 +16,6 @@ combination instead of the representative tier-1 subset — the CI fault
 leg sets this at scale 12).
 """
 import os
-import subprocess
 import sys
 import textwrap
 
@@ -28,18 +27,17 @@ from repro.core.faults import FAULT_CLASSES, FAULT_KINDS, FAULT_SITES, FaultSpec
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+from repro.util import respawn_with_host_devices  # noqa: E402
+
 
 def run_sub(code: str, extra_env: dict | None = None) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = REPO_SRC
-    env.update(extra_env or {})
     # the CI fault leg (FAULT_MATRIX_FULL=1, scale 12) compiles ~100
     # faulted programs in one subprocess and raises this
     timeout = int(os.environ.get("FAULT_SUB_TIMEOUT", "900"))
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
+    out = respawn_with_host_devices(
+        [sys.executable, "-c", textwrap.dedent(code)], 8,
+        extra_env=extra_env, pythonpath=(REPO_SRC,), capture=True,
+        timeout=timeout)
     assert out.returncode == 0, out.stderr[-4000:]
     return out.stdout
 

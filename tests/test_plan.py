@@ -12,7 +12,6 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
 process keeps seeing 1 device (spec requirement).
 """
 import os
-import subprocess
 import sys
 import textwrap
 
@@ -24,14 +23,14 @@ from repro.core.plan import validate_plan
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+from repro.util import respawn_with_host_devices  # noqa: E402
+
 
 def run_sub(code: str, extra_env: dict | None = None) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = REPO_SRC
-    env.update(extra_env or {})
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=900)
+    out = respawn_with_host_devices(
+        [sys.executable, "-c", textwrap.dedent(code)], 8,
+        extra_env=extra_env, pythonpath=(REPO_SRC,), capture=True,
+        timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 

@@ -11,7 +11,6 @@ pytest process must keep seeing 1 device).  The fault test reuses
 re-queue -> degraded-fallback path to an eventually-correct answer.
 """
 import os
-import subprocess
 import sys
 import textwrap
 
@@ -31,16 +30,16 @@ from repro.serve.metrics import ServeReport  # noqa: E402
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+from repro.util import respawn_with_host_devices  # noqa: E402
+
 V = 16
 
 
 def run_sub(code: str, extra_env: dict | None = None) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = REPO_SRC
-    env.update(extra_env or {})
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=900)
+    out = respawn_with_host_devices(
+        [sys.executable, "-c", textwrap.dedent(code)], 8,
+        extra_env=extra_env, pythonpath=(REPO_SRC,), capture=True,
+        timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 

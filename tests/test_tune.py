@@ -10,7 +10,6 @@ matches, and the ``Graph500Config.tuned`` / dry-run-cell consumers.
 import dataclasses
 import json
 import os
-import subprocess
 import sys
 import textwrap
 
@@ -31,6 +30,8 @@ from repro.core.tune import (
 )
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+from repro.util import respawn_with_host_devices  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -109,10 +110,7 @@ def test_sweep_skips_planner_nonpow2_member_on_6_devices():
     """6 visible devices: the enumerated set contains member=3 shapes
     (the planner's (2, 3) split); the sweep must record them as skipped
     via validation's pow2 ValueError and still rank the valid rest."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+    out = respawn_with_host_devices([sys.executable, "-c", textwrap.dedent("""
         from repro.core.tune import BUDGETS, enumerate_plans, sweep
         plans = enumerate_plans(6, BUDGETS["small"])
         assert any("member" in p.layout for p in plans)
@@ -124,7 +122,7 @@ def test_sweep_skips_planner_nonpow2_member_on_6_devices():
         assert all(r.status == "skipped" for r in pow2_skips)
         assert report.winner is not None
         print("OK")
-    """)], capture_output=True, text=True, env=env, timeout=900)
+    """)], 6, pythonpath=(REPO_SRC,), capture=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "OK" in out.stdout
 
