@@ -164,6 +164,25 @@ def collect_rungs(doc: dict, only_fresh: bool = False) -> dict:
                 add(f"bfs_single/{scale_key}/batch64", batch,
                     interp=payload.get("interpret_mode"))
 
+    # Kernel-typed rungs (§16) gate separately under their own names —
+    # an SSSP plan dict carries kernel="sssp", so a BFS baseline can
+    # never silently match an SSSP rung (or vice versa) even if a rung
+    # name collided.
+    ssspm = modules.get("sssp", {})
+    if not only_fresh or "sssp" in fresh_modules:
+        latest = str(ssspm.get("latest_scale"))
+        for scale, payload in ssspm.get("by_scale", {}).items():
+            if only_fresh and str(scale) != latest:
+                continue
+            fresh = set(payload.get("rungs_from_this_run") or [])
+            interp = payload.get("interpret_mode")
+            for name, rung in payload.get("rungs", {}).items():
+                if not isinstance(rung, dict):
+                    continue
+                if only_fresh and name not in fresh:
+                    continue
+                add(f"sssp/scale{scale}/{name}", rung, interp=interp)
+
     serve = modules.get("bfs_serve", {})
     if not only_fresh or "bfs_serve" in fresh_modules:
         latest = str(serve.get("latest_scale"))

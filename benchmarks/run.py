@@ -45,6 +45,7 @@ MODULES = [
     "bfs_single",         # Fig. 10/11
     "bfs_sharded",        # mesh-sharded ladder (DESIGN.md §9)
     "bfs_serve",          # serving latency/throughput (DESIGN.md §14)
+    "sssp",               # second kernel: δ-stepping rungs (DESIGN.md §16)
     "sorting_policies",   # Fig. 12/13
     "heavy_threshold",    # Fig. 14
     "monitor_policies",   # Fig. 15/16

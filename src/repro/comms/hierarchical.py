@@ -199,6 +199,88 @@ def hierarchical_por(x, group_axis: str, member_axis: str, *,
 
 
 # ---------------------------------------------------------------------------
+# hier_min: the minimum-combine twin of the OR family (DESIGN.md §16).
+#
+# SSSP swaps the frontier exchange's idempotent combine from bitwise OR
+# (bitmap union) to element-wise MIN over uint32 distance words, with
+# 0xFFFFFFFF (= +inf distance) as the identity the way 0 is OR's.  The
+# hop structure is identical to ``hierarchical_por`` — min-reduce-scatter
+# over ``member``, min all-reduce over ``group``, delivery all-gather —
+# so the same mesh axes, the same non-dividing fallback, and the same
+# ``inter_group`` fault site apply unchanged.
+# ---------------------------------------------------------------------------
+
+#: uint32 +infinity — the identity of the min combine (unreached distance).
+INF_U32 = 0xFFFFFFFF
+
+
+def _min_reduce_scatter(x, axis_name: str):
+    """Element-wise-min reduce-scatter over one mesh axis (tiled, dim 0).
+
+    Same primitive decomposition as :func:`_or_reduce_scatter` (there is
+    no MIN flavor of ``psum_scatter`` either): all-to-all the
+    destination-major blocks, fold min locally.
+    """
+    n = axis_size(axis_name)
+    lead = x.shape[0]
+    assert lead % n == 0, (lead, n)
+    blocks = x.reshape(n, lead // n, *x.shape[1:])
+    blocks = lax.all_to_all(blocks, axis_name, split_axis=0, concat_axis=0,
+                            tiled=False)
+    out = blocks[0]
+    for i in range(1, n):
+        out = jnp.minimum(out, blocks[i])
+    return out
+
+
+def _min_all_reduce(x, axis_name, *, fault=None, level=None,
+                    device=None, root=None):
+    """Element-wise-min all-reduce over one mesh axis (or an axis tuple —
+    the flat-exchange wiring reduces both axes in one phase).
+
+    ``fault`` (site ``inter_group``) mirrors :func:`_or_all_reduce`: when
+    it fires, every receiver keeps only the axis-index-0 contribution —
+    dropped monitor forwards leave the other groups' distances at INF.
+    """
+    n = axis_size(axis_name)
+    g = lax.all_gather(x, axis_name, axis=0, tiled=False)
+    if isinstance(axis_name, (tuple, list)):
+        g = g.reshape(n, *x.shape)
+    out = g[0]
+    for i in range(1, n):
+        out = jnp.minimum(out, g[i])
+    return faults.drop_peers(fault, out, g[0], level=level, device=device,
+                             root=root) if fault is not None else out
+
+
+def hierarchical_pmin(x, group_axis: str, member_axis: str, *,
+                      fault=None, level=None, device=None, root=None):
+    """Lossless element-wise-min hierarchical all-reduce for integer
+    distance planes — ``hier_min``, the SSSP leg of the monitor exchange.
+
+    Each device contributes a full-width plane that is INF everywhere but
+    its owned slots; the two-phase min delivers the global scatter-min
+    exactly (min is associative, commutative, idempotent — the same
+    algebra the OR family relies on).  Integer payloads only: a float
+    round-trip could perturb the ``dist + w`` tie-breaks the parent
+    convention depends on.
+    """
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(f"hierarchical_pmin is for integer payloads, "
+                        f"got {x.dtype}")
+    m = axis_size(member_axis)
+    if x.shape[0] % m != 0:
+        # fall back: min within group first, then across (still two-phase)
+        x = _min_all_reduce(x, member_axis)
+        return _min_all_reduce(x, group_axis, fault=fault, level=level,
+                               device=device, root=root)
+    shard = _min_reduce_scatter(x, member_axis)
+    shard = _min_all_reduce(shard, group_axis, fault=fault, level=level,
+                            device=device, root=root)
+    return lax.all_gather(shard, member_axis, axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
 # Density-adaptive wire codec for bitmap payloads (DESIGN.md §12).
 #
 # Lv et al.'s "Compression and Sieve" (arXiv:1208.5542) sends each level's

@@ -9,18 +9,29 @@ from repro.core.heavy import (
     HeavyCore, build_heavy_core, pack_bitmap, padded_bitmap_words, unpack_bitmap,
 )
 from repro.core.bfs_steps import (
-    ChunkedEdgeView, EdgeView, chunk_edge_view, edge_view,
+    ChunkedEdgeView, EdgeView, chunk_edge_view, edge_view, with_edge_weights,
 )
+from repro.core.graph_build import DEFAULT_MAX_WEIGHT, edge_weights
 from repro.core.hybrid_bfs import (
     BFSResult, bfs_batch, bfs_batch_sharded, hybrid_bfs,
 )
 from repro.core.faults import FAULT_CLASSES, FaultSpec
-from repro.core.validate import CHECK_NAMES, validate, validate_batch
+from repro.core.validate import (
+    CHECK_NAMES, SSSP_CHECK_NAMES, validate, validate_batch, validate_sssp,
+    validate_sssp_batch,
+)
 from repro.core.teps import (
     run_graph500, run_graph500_batched, run_graph500_sharded, traversed_edges,
 )
+from repro.core.kernels import (
+    KERNELS, KernelSpec, kernel_spec, rekernel_plan,
+)
+from repro.core.sssp_steps import (
+    SSSP_EXCHANGES, bucket_width, sssp_max_rounds, sssp_oracle,
+)
 from repro.core.plan import (
-    BFSPlan, CompiledBFS, Graph500Result, PreparedGraph, compile_plan,
+    BFSPlan, CompiledBFS, Graph500Result, PreparedGraph, TraversalPlan,
+    compile_plan,
 )
 from repro.core.pipeline import Graph500Config, build, run
 
@@ -44,13 +55,17 @@ __all__ = [
     "HeavyCore", "build_heavy_core", "pack_bitmap", "padded_bitmap_words",
     "unpack_bitmap",
     "ChunkedEdgeView", "EdgeView", "chunk_edge_view", "edge_view",
+    "with_edge_weights", "DEFAULT_MAX_WEIGHT", "edge_weights",
     "BFSResult", "bfs_batch", "bfs_batch_sharded", "hybrid_bfs",
     "FAULT_CLASSES", "FaultSpec",
-    "CHECK_NAMES", "validate", "validate_batch",
+    "CHECK_NAMES", "SSSP_CHECK_NAMES", "validate", "validate_batch",
+    "validate_sssp", "validate_sssp_batch",
     "run_graph500", "run_graph500_batched",
     "run_graph500_sharded", "traversed_edges",
-    "BFSPlan", "CompiledBFS", "Graph500Result", "PreparedGraph",
-    "compile_plan",
+    "KERNELS", "KernelSpec", "kernel_spec", "rekernel_plan",
+    "SSSP_EXCHANGES", "bucket_width", "sssp_max_rounds", "sssp_oracle",
+    "BFSPlan", "TraversalPlan", "CompiledBFS", "Graph500Result",
+    "PreparedGraph", "compile_plan",
     "TuneReport", "TuneResult", "enumerate_plans", "load_table",
     "save_tuned", "sweep", "tuned_plan",
     "Graph500Config", "build", "run",

@@ -31,12 +31,20 @@ from repro.util import pytree_dataclass
 
 @pytree_dataclass(meta=("num_vertices",))
 class EdgeView:
-    """Edge-parallel view of a CSR graph (static shapes)."""
+    """Edge-parallel view of a CSR graph (static shapes).
+
+    ``weight`` is the optional per-entry uint32 weight plane the SSSP
+    kernel consumes (``graph_build.edge_weights``; symmetric, 0 on invalid
+    slots); ``None`` for unweighted BFS graphs — the pytree registration
+    treats a ``None`` field as an empty subtree, so every existing BFS
+    program is byte-identical.
+    """
 
     src: jax.Array    # [E_pad] int32 (sentinel V on padding)
     dst: jax.Array    # [E_pad] int32
     valid: jax.Array  # [E_pad] bool
     num_vertices: int
+    weight: jax.Array | None = None   # [E_pad] uint32 (0 on padding)
 
 
 def edge_view(g: CSRGraph) -> EdgeView:
@@ -44,6 +52,18 @@ def edge_view(g: CSRGraph) -> EdgeView:
     s = jnp.where(valid, s, g.num_vertices)
     d = jnp.where(valid, d, g.num_vertices)
     return EdgeView(s, d, valid, g.num_vertices)
+
+
+def with_edge_weights(ev: EdgeView, *, seed: int = 0,
+                      max_weight: int | None = None) -> EdgeView:
+    """The same view with a deterministic symmetric weight plane attached
+    (``graph_build.edge_weights`` of the canonical endpoint pair)."""
+    from repro.core.graph_build import DEFAULT_MAX_WEIGHT, edge_weights
+
+    w = edge_weights(ev.src, ev.dst, ev.valid, seed=seed,
+                     max_weight=(DEFAULT_MAX_WEIGHT if max_weight is None
+                                 else max_weight))
+    return EdgeView(ev.src, ev.dst, ev.valid, ev.num_vertices, w)
 
 
 def relax_step(
@@ -122,6 +142,7 @@ class ChunkedEdgeView:
     num_vertices: int
     n_chunks: int
     chunk_size: int
+    weight: jax.Array | None = None   # [n_chunks, chunk_size] uint32
 
 
 def chunk_edge_view(ev: EdgeView, n_chunks: int = DEFAULT_CHUNKS) -> ChunkedEdgeView:
@@ -135,7 +156,10 @@ def chunk_edge_view(ev: EdgeView, n_chunks: int = DEFAULT_CHUNKS) -> ChunkedEdge
     valid = jnp.pad(ev.valid, (0, pad)).reshape(n_chunks, chunk_size)
     src_lo = jnp.min(jnp.where(valid, src, v), axis=1).astype(jnp.int32)
     src_hi = jnp.max(jnp.where(valid, src, -1), axis=1).astype(jnp.int32)
-    return ChunkedEdgeView(src, dst, valid, src_lo, src_hi, v, n_chunks, chunk_size)
+    weight = (None if ev.weight is None
+              else jnp.pad(ev.weight, (0, pad)).reshape(n_chunks, chunk_size))
+    return ChunkedEdgeView(src, dst, valid, src_lo, src_hi, v, n_chunks,
+                           chunk_size, weight)
 
 
 def chunk_range_mask(src_lo: jax.Array, src_hi: jax.Array,

@@ -84,6 +84,10 @@ class ShardedGraph:
     chunk_size: int
     w_loc: int               # bitmap words owned per device
     partition: str = "block"
+    # [P, n_chunks, chunk_size] uint32 per-edge weights (SSSP kernel);
+    # None on unweighted BFS shards — an empty pytree subtree, so every
+    # existing BFS shard_map program keeps its exact signature.
+    weight: jax.Array | None = None
 
 
 def owner_local_of(v, n_devices: int, w_loc: int, partition: str):
@@ -228,10 +232,11 @@ def modeled_wire_bytes(level, *, n_devices: int, w_loc: int, group: int,
 
 def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
                 n_chunks: int = DEFAULT_CHUNKS,
-                partition: str = "block") -> ShardedGraph:
+                partition: str = "block", weight=None) -> ShardedGraph:
     """Host-side partitioner: word-granular vertex ownership (``block`` or
     ``word_cyclic``), dst-owner edge split, per-shard src-sorted chunks
-    with source ranges."""
+    with source ranges.  ``weight`` (optional [E_pad] uint32) rides the
+    same per-shard boolean select as the edges themselves."""
     import numpy as np
 
     if partition not in PARTITIONS:
@@ -245,6 +250,7 @@ def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
     src = np.asarray(src)
     dst = np.asarray(dst)
     valid = np.asarray(valid)
+    weight = None if weight is None else np.asarray(weight, np.uint32)
     dst_owner, dst_slot = owner_local_of(dst, p, w_loc, partition)
     owner = np.where(valid, dst_owner, p)
     counts = np.bincount(owner[valid], minlength=p)[:p]
@@ -255,6 +261,7 @@ def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
     s = np.full((p, e_pad), v_pad, np.int32)
     dl = np.zeros((p, e_pad), np.int32)
     va = np.zeros((p, e_pad), bool)
+    wt = None if weight is None else np.zeros((p, e_pad), np.uint32)
     for pe in range(p):
         sel = valid & (owner == pe)
         k = int(sel.sum())
@@ -267,9 +274,13 @@ def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
         s[pe, :k] = src[sel]
         dl[pe, :k] = dst_slot[sel]
         va[pe, :k] = True
+        if wt is not None:
+            wt[pe, :k] = weight[sel]
     s = s.reshape(p, n_chunks, chunk_size)
     dl = dl.reshape(p, n_chunks, chunk_size)
     va = va.reshape(p, n_chunks, chunk_size)
+    if wt is not None:
+        wt = wt.reshape(p, n_chunks, chunk_size)
     src_lo = np.where(va, s, v_pad).min(axis=2).astype(np.int32)
     src_hi = np.where(va, s, -1).max(axis=2).astype(np.int32)
 
@@ -288,6 +299,7 @@ def shard_graph(src, dst, valid, num_vertices: int, n_devices: int,
         num_vertices=v_pad, v_orig=num_vertices, n_devices=p,
         n_chunks=n_chunks, chunk_size=chunk_size, w_loc=w_loc,
         partition=partition,
+        weight=None if wt is None else jnp.asarray(wt),
     )
 
 

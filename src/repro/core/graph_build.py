@@ -99,3 +99,46 @@ def build_csr(edges: EdgeList) -> CSRGraph:
 def csr_to_edge_arrays(g: CSRGraph) -> tuple[jax.Array, jax.Array, jax.Array]:
     """(src, dst, valid) per directed CSR entry — the edge-parallel view."""
     return g.edge_sources(), g.col_indices, g.edge_valid
+
+
+# ---------------------------------------------------------------------------
+# Deterministic edge weights (the SSSP kernel's input, DESIGN.md §16).
+#
+# Graph500's SSSP kernel draws uniform weights per *undirected* edge; with
+# the CSR holding both directed entries of each edge, the weight must be a
+# pure function of the unordered endpoint pair so w(u,v) == w(v,u) without
+# ever materializing an undirected edge list.  A 32-bit finalizer hash of
+# the canonical (min, max) pair gives exactly that — same bits on numpy
+# and jnp inputs, so the host Dijkstra oracle and the device engines see
+# identical weights by construction.
+# ---------------------------------------------------------------------------
+
+DEFAULT_MAX_WEIGHT = 255
+
+
+def _mix32(h):
+    """32-bit finalizer (lowbias32-style avalanche); numpy/jnp uint32."""
+    u32 = jnp.uint32
+    h = h ^ (h >> u32(16))
+    h = h * u32(0x7FEB352D)
+    h = h ^ (h >> u32(15))
+    h = h * u32(0x846CA68B)
+    return h ^ (h >> u32(16))
+
+
+def edge_weights(src, dst, valid, *, seed: int = 0,
+                 max_weight: int = DEFAULT_MAX_WEIGHT):
+    """uint32 weight in ``[1, max_weight]`` per directed edge entry, 0 on
+    invalid slots; symmetric (``w(u,v) == w(v,u)``) and deterministic in
+    ``seed``.  Works on numpy or jnp arrays (integer-exact either way)."""
+    if max_weight < 1:
+        raise ValueError(f"max_weight must be >= 1, got {max_weight}")
+    u32 = jnp.uint32
+    s = jnp.asarray(src).astype(u32)
+    d = jnp.asarray(dst).astype(u32)
+    a = jnp.minimum(s, d)
+    b = jnp.maximum(s, d)
+    h = _mix32(a * u32(0x9E3779B9) + u32(seed & 0xFFFFFFFF))
+    h = _mix32(h ^ (b * u32(0x85EBCA6B)))
+    w = u32(1) + h % u32(max_weight)
+    return jnp.where(jnp.asarray(valid), w, u32(0))

@@ -29,6 +29,7 @@ Every rung is executed by constructing a :class:`repro.core.plan.BFSPlan`
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -36,8 +37,8 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.core import kronecker
-from repro.core.bfs_steps import EdgeView, edge_view
-from repro.core.graph_build import build_csr
+from repro.core.bfs_steps import EdgeView, edge_view, with_edge_weights
+from repro.core.graph_build import DEFAULT_MAX_WEIGHT, build_csr
 from repro.core.heavy import HeavyCore, build_heavy_core
 from repro.core.plan import BFSPlan, compile_plan
 from repro.core.reorder import Reordering, degree_reorder, relabel_edges
@@ -93,6 +94,12 @@ class Graph500Config:
     # single-process.
     procs: int = 1
     devices_per_proc: Optional[int] = None
+    # Graph500 kernel (DESIGN.md §16): "bfs" or "sssp".  Under "sssp" the
+    # build step attaches the deterministic symmetric weight plane
+    # (seeded from cfg.seed, uniform in [1, max_weight]) and the plan
+    # runs the δ-stepping engine with the min-combine exchange family.
+    kernel: str = "bfs"
+    max_weight: int = DEFAULT_MAX_WEIGHT
 
     @staticmethod
     def ladder(rung: str, **kw) -> "Graph500Config":
@@ -147,7 +154,8 @@ class Graph500Config:
                 for f in ("engine", "exchange", "partition", "alpha", "beta")
                 if getattr(self, f) != getattr(defaults, f)
             }
-            base = tuned_plan(self.scale, overrides=overrides)
+            base = tuned_plan(self.scale, overrides=overrides,
+                              kernel=self.kernel)
             if base is not None:
                 return base
         if self.layout is not None:
@@ -166,7 +174,7 @@ class Graph500Config:
             engine=self.engine, layout=layout, mesh_shape=mesh_shape,
             exchange=self.exchange, partition=self.partition,
             alpha=self.alpha, beta=self.beta,
-            batch_roots=self.batched,
+            batch_roots=self.batched, kernel=self.kernel,
         )
 
 
@@ -195,6 +203,10 @@ def build(cfg: Graph500Config) -> BuiltGraph:
     if cfg.heavy_threshold is not None:
         core = build_heavy_core(g, threshold=cfg.heavy_threshold)
     ev = edge_view(g)
+    if cfg.kernel == "sssp":
+        # The weight plane is a pure function of the *relabelled* global
+        # endpoint pair — the oracle and every engine hash the same ids.
+        ev = with_edge_weights(ev, seed=cfg.seed, max_weight=cfg.max_weight)
     ev.src.block_until_ready()
     return BuiltGraph(
         ev=ev, degree=g.degree, core=core, reorder=reord,

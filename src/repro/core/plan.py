@@ -6,12 +6,15 @@ group-based monitor communication (T3) — and Buluç–Madduri
 (arXiv:1104.4518) shows the partitionings are points in one design space
 selected per run.  This module makes that the API:
 
-  1. **spec** — :class:`BFSPlan`, a frozen dataclass naming the engine,
-     the mesh *layout* (which of the three axes ``root`` / ``group`` /
-     ``member`` exist and their sizes), the delta-exchange strategy, the
-     direction-switch α/β and the chunking knobs.  Sharding layout,
-     exchange wiring and root batching are orthogonal declarative axes —
-     not separate entry points.
+  1. **spec** — :class:`TraversalPlan` (née ``BFSPlan``; the old name
+     survives as an alias), a frozen dataclass naming the *kernel*
+     (``"bfs"`` / ``"sssp"`` — the traversal-lifecycle contract of
+     DESIGN.md §16 and ``core.kernels``), the engine, the mesh *layout*
+     (which of the three axes ``root`` / ``group`` / ``member`` exist
+     and their sizes), the delta-exchange strategy, the direction-switch
+     α/β and the chunking knobs.  Kernel, sharding layout, exchange
+     wiring and root batching are orthogonal declarative axes — not
+     separate entry points.
   2. **plan** — :func:`compile_plan` validates the spec against the
      available devices and :func:`repro.comms.topology.plan_device_mesh`,
      builds (or checks) the device mesh, prepares the graph inputs
@@ -85,8 +88,17 @@ from repro.core.hybrid_bfs import (
     _run_legacy,
 )
 from repro.core.hybrid_bfs import SENTINEL_OK
+from repro.core.kernels import kernel_spec, validate_result_batch
+from repro.core.sssp_steps import (
+    _run_sssp,
+    _run_sssp_batch,
+    _run_sssp_impl,
+    _run_sssp_sharded,
+    bucket_width,
+    sssp_max_rounds,
+)
 from repro.core.teps import Graph500Run, traversed_edges
-from repro.core.validate import failure_report, validate_batch
+from repro.core.validate import failure_report
 from repro.kernels import ops as kops
 from repro.util import make_mesh, shard_map
 
@@ -103,11 +115,17 @@ VALID_LAYOUTS = (
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class BFSPlan:
-    """Frozen declarative spec of one Graph500 BFS execution.
+class TraversalPlan:
+    """Frozen declarative spec of one Graph500 traversal execution.
 
     Field → paper-technique mapping (full table in DESIGN.md §10):
 
+      ``kernel``      which Graph500 kernel runs under the plan:
+                      ``"bfs"`` (default) or ``"sssp"`` (δ-stepping over
+                      seeded uniform weights — DESIGN.md §16).  The
+                      kernel picks the state carrier / relax rule /
+                      exchange combine / validation contract from
+                      ``core.kernels``; every other axis is shared.
       ``engine``      Fig. 18 ladder rung (reference / legacy / bitmap-T1)
       ``layout``      which mesh axes exist — §4.2 partitioning choice
       ``mesh_shape``  per-axis sizes; ``None`` infers from the visible
@@ -141,12 +159,19 @@ class BFSPlan:
     max_levels: int = MAX_LEVELS
     n_chunks: int = DEFAULT_CHUNKS
     batch_roots: bool = True
+    kernel: str = "bfs"     # LAST field: positional constructions predate it
 
     def __post_init__(self):
         object.__setattr__(self, "layout", tuple(self.layout))
         if self.mesh_shape is not None:
             object.__setattr__(
                 self, "mesh_shape", tuple(int(s) for s in self.mesh_shape))
+        # The generic default exchange is the OR-family one; a plan that
+        # kept it while selecting the min-combine kernel means "the
+        # default wiring for this kernel" — normalize rather than error
+        # (explicit OR-family variants still fail in validate_plan).
+        if self.kernel == "sssp" and self.exchange == "hier_or":
+            object.__setattr__(self, "exchange", "hier_min")
 
     def to_dict(self) -> dict:
         """JSON-ready dict (recorded in BENCH_bfs.json rung metadata)."""
@@ -157,16 +182,23 @@ class BFSPlan:
         return d
 
     @staticmethod
-    def from_dict(d: dict) -> "BFSPlan":
+    def from_dict(d: dict) -> "TraversalPlan":
         """Inverse of :meth:`to_dict` (TUNED_PLANS.json / BENCH_bfs.json
         rung metadata back to a spec).  Unknown keys are rejected so a
-        table written by a future plan schema fails loudly."""
-        fields = {f.name for f in dataclasses.fields(BFSPlan)}
+        table written by a future plan schema fails loudly; missing keys
+        default-fill, so pre-§16 tables (no ``kernel`` field) load as
+        BFS plans unchanged."""
+        fields = {f.name for f in dataclasses.fields(TraversalPlan)}
         unknown = set(d) - fields
         if unknown:
             raise ValueError(f"unknown BFSPlan fields {sorted(unknown)}; "
                              f"expected a subset of {sorted(fields)}")
-        return BFSPlan(**d)
+        return TraversalPlan(**d)
+
+
+#: Migration shim (DESIGN.md §16): the spec predates the second kernel
+#: and every existing call site constructs a ``BFSPlan``.
+BFSPlan = TraversalPlan
 
 
 @dataclass
@@ -220,9 +252,9 @@ class Graph500Result:
     """
 
     parent: np.ndarray          # [R, V] int32
-    level: np.ndarray           # [R, V] int32
+    level: np.ndarray           # [R, V] int32 (SSSP: the distance plane)
     run: Graph500Run
-    plan: BFSPlan
+    plan: TraversalPlan
     mesh_axes: Optional[dict]   # {axis: size} of the resolved mesh
 
 
@@ -249,18 +281,26 @@ def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
-def validate_plan(plan: BFSPlan) -> None:
-    """Field-level checks (no devices touched) — all errors are ValueError."""
-    if plan.engine not in ENGINES:
+def validate_plan(plan: TraversalPlan) -> None:
+    """Field-level checks (no devices touched) — all errors are ValueError.
+
+    Kernel-generic: the engine and exchange vocabularies come from the
+    plan's :func:`repro.core.kernels.kernel_spec` row, so e.g. an
+    OR-family exchange under the SSSP kernel fails here, not in a
+    shard_map trace.
+    """
+    spec = kernel_spec(plan.kernel)     # rejects unknown kernels
+    if plan.engine not in spec.engines:
         raise ValueError(
-            f"unknown engine {plan.engine!r}; expected one of {ENGINES}")
+            f"unknown engine {plan.engine!r} for kernel {plan.kernel!r}; "
+            f"expected one of {spec.engines}")
     if plan.layout not in VALID_LAYOUTS:
         raise ValueError(
             f"unknown layout {plan.layout!r}; expected one of {VALID_LAYOUTS}")
-    if plan.exchange not in SHARD_EXCHANGES:
+    if plan.exchange not in spec.shard_exchanges:
         raise ValueError(
-            f"unknown exchange {plan.exchange!r}; expected one of "
-            f"{SHARD_EXCHANGES}")
+            f"unknown exchange {plan.exchange!r} for kernel "
+            f"{plan.kernel!r}; expected one of {spec.shard_exchanges}")
     if plan.partition not in PARTITIONS:
         raise ValueError(
             f"unknown partition {plan.partition!r}; expected one of "
@@ -401,7 +441,7 @@ def mesh_process_count(mesh) -> int:
                 for d in np.asarray(mesh.devices).flat})
 
 
-def _prepare(built, plan: BFSPlan, n_dev_vertex: int) -> PreparedGraph:
+def _prepare(built, plan: TraversalPlan, n_dev_vertex: int) -> PreparedGraph:
     if isinstance(built, PreparedGraph):
         pg = dataclasses.replace(built)
     else:
@@ -412,6 +452,11 @@ def _prepare(built, plan: BFSPlan, n_dev_vertex: int) -> PreparedGraph:
             chunks=getattr(built, "chunks", None),
             sharded=getattr(built, "sharded", None),
         )
+    needs_w = kernel_spec(plan.kernel).needs_weights
+    if needs_w and pg.ev is not None and pg.ev.weight is None:
+        raise ValueError(
+            f"kernel={plan.kernel!r} needs edge weights — attach them "
+            f"with with_edge_weights(ev) before compiling the plan")
     if "member" in plan.layout:
         if pg.sharded is None:
             if pg.ev is None:
@@ -421,7 +466,8 @@ def _prepare(built, plan: BFSPlan, n_dev_vertex: int) -> PreparedGraph:
             pg.sharded = shard_graph(
                 np.asarray(pg.ev.src), np.asarray(pg.ev.dst),
                 np.asarray(pg.ev.valid), pg.ev.num_vertices,
-                n_dev_vertex, plan.n_chunks, partition=plan.partition)
+                n_dev_vertex, plan.n_chunks, partition=plan.partition,
+                weight=(np.asarray(pg.ev.weight) if needs_w else None))
         elif pg.sharded.n_devices != n_dev_vertex:
             raise ValueError(
                 f"ShardedGraph was partitioned for "
@@ -433,12 +479,19 @@ def _prepare(built, plan: BFSPlan, n_dev_vertex: int) -> PreparedGraph:
                 f"partition={pg.sharded.partition!r} but the plan says "
                 f"{plan.partition!r} — re-run shard_graph (the owner map "
                 f"is baked into the edge split)")
+        if needs_w and pg.sharded.weight is None:
+            raise ValueError(
+                f"kernel={plan.kernel!r} needs a weighted ShardedGraph — "
+                f"pass weight= to shard_graph (or let compile_plan shard "
+                f"a weighted EdgeView)")
     else:
         if pg.ev is None:
             raise ValueError("plan needs built.ev (an EdgeView)")
         if pg.degree is None:
             raise ValueError("plan needs built.degree")
-        if plan.engine == "bitmap" and pg.chunks is None:
+        if plan.engine == "bitmap" and (
+                pg.chunks is None
+                or (needs_w and pg.chunks.weight is None)):
             pg.chunks = chunk_edge_view(pg.ev, plan.n_chunks)
     return pg
 
@@ -452,23 +505,33 @@ _MESH_FN_CACHE: dict = {}
 
 
 def _root_parallel_fn(mesh, root_axis, alpha, beta, use_core, max_levels,
-                      use_pallas_core, fault=None):
+                      use_pallas_core, fault=None, *, kernel="bfs",
+                      delta=1, max_rounds=0):
     """Jitted layer-1 program: roots split over ``root_axis``, graph
-    replicated, zero communication."""
+    replicated, zero communication.  Kernel-generic — the local body is
+    the kernel's single-device engine vmapped over the root slice."""
     key = ("root", mesh, root_axis, alpha, beta, use_core, max_levels,
-           use_pallas_core, fault)
+           use_pallas_core, fault, kernel, delta, max_rounds)
     fn = _MESH_FN_CACHE.get(key)
     if fn is not None:
         return fn
 
-    def local(chunks, degree, n_active, roots, core):
-        return jax.vmap(
-            lambda r: _run_bitmap_impl(
-                chunks, degree, n_active, r, core,
-                alpha=alpha, beta=beta, use_core=use_core,
-                max_levels=max_levels, use_pallas_core=use_pallas_core,
-                fault=fault)
-        )(roots)
+    if kernel == "sssp":
+        def local(chunks, degree, n_active, roots, core):
+            return jax.vmap(
+                lambda r: _run_sssp_impl(
+                    chunks, degree, r, delta=delta, max_rounds=max_rounds,
+                    fault=fault)
+            )(roots)
+    else:
+        def local(chunks, degree, n_active, roots, core):
+            return jax.vmap(
+                lambda r: _run_bitmap_impl(
+                    chunks, degree, n_active, r, core,
+                    alpha=alpha, beta=beta, use_core=use_core,
+                    max_levels=max_levels, use_pallas_core=use_pallas_core,
+                    fault=fault)
+            )(roots)
 
     fn = jax.jit(shard_map(
         local,
@@ -498,8 +561,11 @@ def vertex_sharded_program(
     use_pallas_core: bool = False,
     batched: bool = False,
     fault=None,
+    kernel: str = "bfs",
+    delta: int = 1,
+    max_rounds: int = 0,
 ):
-    """Build the UNJITTED shard_map'd vertex-sharded BFS program.
+    """Build the UNJITTED shard_map'd vertex-sharded traversal program.
 
     The one copy of the layer-2 (and composed layer-1×2) shard_map
     wiring: :func:`compile_plan` jits it for execution and
@@ -519,40 +585,76 @@ def vertex_sharded_program(
 
     (``core`` is an argument only when ``use_core``; ``sentinel`` is the
     per-level in-loop check-mask trace of ``BFSStats.sentinel``.)
+
+    Under ``kernel="sssp"`` the edge ``weight`` plane joins the sharded
+    inputs (after ``src_hi``) and the heavy core never applies::
+
+        f(roots, src, dst_local, valid, src_lo, src_hi, weight,
+          degree_local, n_active) -> (parent, dist, rounds, sentinel)
     """
     va = _flat_names((group_axis, member_axis))
-    run_one = functools.partial(
-        _run_bitmap_sharded,
-        alpha=alpha, beta=beta, use_core=use_core, max_levels=max_levels,
-        use_pallas_core=use_pallas_core, w_loc=w_loc, n_dev=n_dev,
-        group_axis=group_axis, member_axis=member_axis, exchange=exchange,
-        partition=partition, fault=fault,
-    )
     vmapped = batched or root_axis is not None
 
-    def local(roots, src, dst_local, valid, src_lo, src_hi, degree_local,
-              n_active, *maybe_core):
-        core = maybe_core[0] if use_core else None
-        args = (src[0], dst_local[0], valid[0], src_lo[0], src_hi[0],
-                degree_local[0])
-        if vmapped:
-            res = jax.vmap(lambda r: run_one(*args, n_active, r, core))(roots)
-        else:
-            res = run_one(*args, n_active, roots, core)
-        return (res.parent, res.level, res.stats.levels,
-                res.stats.sentinel)
+    if kernel == "sssp":
+        if use_core:
+            raise ValueError("the SSSP kernel has no heavy-core step "
+                             "(boolean-semiring SpMV carries no weights)")
+        run_one = functools.partial(
+            _run_sssp_sharded,
+            delta=delta, max_rounds=max_rounds, w_loc=w_loc, n_dev=n_dev,
+            group_axis=group_axis, member_axis=member_axis,
+            exchange=exchange, partition=partition, fault=fault,
+        )
+
+        def local(roots, src, dst_local, valid, src_lo, src_hi, weight,
+                  degree_local, n_active):
+            args = (src[0], dst_local[0], valid[0], weight[0],
+                    degree_local[0])
+            if vmapped:
+                res = jax.vmap(lambda r: run_one(*args, r))(roots)
+            else:
+                res = run_one(*args, roots)
+            return (res.parent, res.level, res.stats.levels,
+                    res.stats.sentinel)
+
+        n_sharded = 7
+    else:
+        run_one = functools.partial(
+            _run_bitmap_sharded,
+            alpha=alpha, beta=beta, use_core=use_core,
+            max_levels=max_levels, use_pallas_core=use_pallas_core,
+            w_loc=w_loc, n_dev=n_dev, group_axis=group_axis,
+            member_axis=member_axis, exchange=exchange,
+            partition=partition, fault=fault,
+        )
+
+        def local(roots, src, dst_local, valid, src_lo, src_hi,
+                  degree_local, n_active, *maybe_core):
+            core = maybe_core[0] if use_core else None
+            args = (src[0], dst_local[0], valid[0], src_lo[0], src_hi[0],
+                    degree_local[0])
+            if vmapped:
+                res = jax.vmap(
+                    lambda r: run_one(*args, n_active, r, core))(roots)
+            else:
+                res = run_one(*args, n_active, roots, core)
+            return (res.parent, res.level, res.stats.levels,
+                    res.stats.sentinel)
+
+        n_sharded = 6
 
     g_spec = P(va)
     core_specs = (P(),) if use_core else ()
     if root_axis is not None:
-        in_specs = (P(root_axis),) + (g_spec,) * 6 + (P(),) + core_specs
+        in_specs = (P(root_axis),) + (g_spec,) * n_sharded + (P(),) \
+            + core_specs
         out_specs = (P(root_axis, va), P(root_axis, va), P(root_axis),
                      P(root_axis))
     elif batched:
-        in_specs = (P(),) + (g_spec,) * 6 + (P(),) + core_specs
+        in_specs = (P(),) + (g_spec,) * n_sharded + (P(),) + core_specs
         out_specs = (P(None, va), P(None, va), P(), P())
     else:
-        in_specs = (P(),) + (g_spec,) * 6 + (P(),) + core_specs
+        in_specs = (P(),) + (g_spec,) * n_sharded + (P(),) + core_specs
         out_specs = (P(va), P(va), P(), P())
     return shard_map(local, mesh=mesh, in_specs=in_specs,
                      out_specs=out_specs, check=False)
@@ -571,7 +673,7 @@ def _vertex_fn(mesh, **kw):
 # 4. compile_plan + the runner
 # ---------------------------------------------------------------------------
 
-def compile_plan(plan: BFSPlan, built, *, mesh=None,
+def compile_plan(plan: TraversalPlan, built, *, mesh=None,
                  axis_names=None, fault=None) -> "CompiledBFS":
     """Validate ``plan``, prepare the graph inputs, and close over one
     jitted (possibly shard_map'd) callable.
@@ -604,22 +706,43 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
         n_dev_vertex = (_role_size(mesh, role["group"])
                         * _role_size(mesh, role["member"]))
     pg = _prepare(built, plan, n_dev_vertex)
-    use_core = pg.core is not None
+    # The heavy-core dense corner is a boolean-semiring step — it has no
+    # weight plane, so only the BFS kernel consults it.
+    use_core = pg.core is not None and plan.kernel == "bfs"
     use_pallas = not kops.interpret_mode()
     root_axis_size = _role_size(mesh, role["root"]) if "root" in role else 1
+
+    # δ-stepping statics (SSSP only): the bucket width is a compile-time
+    # constant derived host-side from the max edge weight.
+    kernel = plan.kernel
+    kernel_kw: dict = {}
+    if kernel == "sssp":
+        w_arr = (pg.ev.weight
+                 if pg.ev is not None and pg.ev.weight is not None
+                 else pg.sharded.weight)
+        maxw = int(jax.device_get(jnp.max(w_arr)))
+        kernel_kw = dict(kernel="sssp", delta=bucket_width(maxw),
+                         max_rounds=sssp_max_rounds(plan.max_levels))
 
     if not plan.layout:
         if plan.batch_roots:
             chunks, degree, core = pg.chunks, pg.degree, pg.core
             n_active = jnp.sum(degree > 0).astype(jnp.int32)
 
-            def raw(roots):
-                return _run_batch(
-                    chunks, degree, n_active, roots,
-                    core if use_core else None,
-                    alpha=plan.alpha, beta=plan.beta, use_core=use_core,
-                    max_levels=plan.max_levels, use_pallas_core=use_pallas,
-                    fault=fault)
+            if kernel == "sssp":
+                def raw(roots):
+                    return _run_sssp_batch(
+                        chunks, degree, roots,
+                        delta=kernel_kw["delta"],
+                        max_rounds=kernel_kw["max_rounds"], fault=fault)
+            else:
+                def raw(roots):
+                    return _run_batch(
+                        chunks, degree, n_active, roots,
+                        core if use_core else None,
+                        alpha=plan.alpha, beta=plan.beta, use_core=use_core,
+                        max_levels=plan.max_levels,
+                        use_pallas_core=use_pallas, fault=fault)
         else:
             ev, chunks, degree, core = pg.ev, pg.chunks, pg.degree, pg.core
             n_active = jnp.sum(degree > 0).astype(jnp.int32)
@@ -627,6 +750,10 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
             legacy_core = engine == "legacy" and use_core
 
             def raw(root):
+                if kernel == "sssp":
+                    return _run_sssp(
+                        chunks, degree, root, delta=kernel_kw["delta"],
+                        max_rounds=kernel_kw["max_rounds"], fault=fault)
                 if engine == "bitmap":
                     return _run_bitmap(
                         chunks, degree, n_active, root,
@@ -644,7 +771,8 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
         chunks, degree, core = pg.chunks, pg.degree, pg.core
         n_active = jnp.sum(degree > 0).astype(jnp.int32)
         fn = _root_parallel_fn(mesh, role["root"], plan.alpha, plan.beta,
-                               use_core, plan.max_levels, use_pallas, fault)
+                               use_core, plan.max_levels, use_pallas, fault,
+                               **kernel_kw)
 
         def raw(roots):
             return fn(chunks, degree, n_active, roots,
@@ -662,7 +790,7 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
             alpha=plan.alpha, beta=plan.beta,
             use_core=use_core, max_levels=plan.max_levels,
             use_pallas_core=use_pallas, batched=plan.batch_roots,
-            fault=fault,
+            fault=fault, **kernel_kw,
         )
         core_args = (pg.core,) if use_core else ()
         # Reassembly: shard outputs concatenate shard-major; under the
@@ -673,9 +801,11 @@ def compile_plan(plan: BFSPlan, built, *, mesh=None,
                 if plan.partition != "block" else None)
 
         def raw(roots):
+            gargs = (sg.src, sg.dst_local, sg.valid, sg.src_lo, sg.src_hi)
+            if kernel == "sssp":
+                gargs = gargs + (sg.weight,)
             parent, level, levels, sentinel = fn(
-                roots, sg.src, sg.dst_local, sg.valid, sg.src_lo,
-                sg.src_hi, sg.degree_local, sg.n_active, *core_args)
+                roots, *gargs, sg.degree_local, sg.n_active, *core_args)
             if perm is not None:
                 parent = jnp.take(parent, perm, axis=-1)
                 level = jnp.take(level, perm, axis=-1)
@@ -715,7 +845,7 @@ class CompiledBFS:
     :class:`Graph500Result`.
     """
 
-    plan: BFSPlan
+    plan: TraversalPlan
     mesh: Any
     graph: PreparedGraph
     num_vertices: int           # original V (before shard padding)
@@ -802,10 +932,12 @@ class CompiledBFS:
         if (not self.plan.layout and self.plan.engine == "bitmap"
                 and self.plan.batch_roots):
             return None
-        fb_plan = BFSPlan(engine="bitmap", layout=(), batch_roots=True,
-                          alpha=self.plan.alpha, beta=self.plan.beta,
-                          max_levels=self.plan.max_levels,
-                          n_chunks=self.plan.n_chunks)
+        fb_plan = TraversalPlan(engine="bitmap", layout=(),
+                                batch_roots=True,
+                                alpha=self.plan.alpha, beta=self.plan.beta,
+                                max_levels=self.plan.max_levels,
+                                n_chunks=self.plan.n_chunks,
+                                kernel=self.plan.kernel)
         self._fallback = compile_plan(
             fb_plan, PreparedGraph(ev=pg.ev, degree=pg.degree, core=pg.core),
             fault=self._fault)
@@ -912,7 +1044,8 @@ class CompiledBFS:
         sent_np = (np.asarray(sent)
                    if check == "full" and sent is not None else None)
         counts, failures = _check_batch(ev, parent_np, level_np, roots_np,
-                                        check, sent_np)
+                                        check, sent_np,
+                                        kernel=self.plan.kernel)
         checked = bool(counts)      # some check actually ran
         g500.check_counts = dict(counts)
         g500.check_failures = {int(roots_np[i]): list(names)
@@ -921,7 +1054,8 @@ class CompiledBFS:
         # --- recovery: retry -> degraded fallback -> quarantine ---
         def attempt(idx, solver):
             p2, l2, s2 = solver(roots_np[idx])
-            f2 = _recheck_rows(ev, p2, l2, roots_np[idx], check, s2)
+            f2 = _recheck_rows(ev, p2, l2, roots_np[idx], check, s2,
+                               kernel=self.plan.kernel)
             for j, i in enumerate(idx):
                 i = int(i)
                 if j in f2:
@@ -983,11 +1117,13 @@ class CompiledBFS:
         level_np = np.array(l)
         sent_np = sent if check == "full" and sent is not None else None
         counts, failures = _check_batch(ev, parent_np, level_np, roots_np,
-                                        check, sent_np)
+                                        check, sent_np,
+                                        kernel=self.plan.kernel)
 
         def attempt(idx, solver):
             p2, l2, s2 = solver(roots_np[idx])
-            f2 = _recheck_rows(ev, p2, l2, roots_np[idx], check, s2)
+            f2 = _recheck_rows(ev, p2, l2, roots_np[idx], check, s2,
+                               kernel=self.plan.kernel)
             for j, i in enumerate(idx):
                 i = int(i)
                 if j in f2:
@@ -1009,20 +1145,23 @@ class CompiledBFS:
         return ServeBatch(parent_np, level_np, counts, failures)
 
 
-def _check_batch(ev, parents, levels, roots, check, sent):
+def _check_batch(ev, parents, levels, roots, check, sent, kernel="bfs"):
     """Detection pass shared by :meth:`CompiledBFS.run`,
     :meth:`CompiledBFS.serve_batch` and the recovery rechecks.
 
     Returns ``(counts, failures)``: per-check failure counts (zeros
     included whenever the spec checks ran — the stable BENCH shape) and
     a row-index → failed-check-names map.  ``sent`` is the per-row
-    in-loop sentinel trace, applied only under ``check="full"``.
+    in-loop sentinel trace, applied only under ``check="full"``.  The
+    spec-check vocabulary is the kernel's (``core.kernels``); for SSSP
+    the ``levels`` rows carry the distance plane.
     """
     counts: dict[str, int] = {}
     failures: dict[int, list[str]] = {}
     if check != "off" and ev is not None:
-        val = validate_batch(ev, jnp.asarray(parents), jnp.asarray(levels),
-                             np.asarray(roots, np.int32))
+        val = validate_result_batch(
+            kernel, ev, jnp.asarray(parents), jnp.asarray(levels),
+            np.asarray(roots, np.int32))
         counts, failures = failure_report(val)
     if check == "full" and sent is not None:
         sent = np.asarray(sent)
@@ -1033,10 +1172,10 @@ def _check_batch(ev, parents, levels, roots, check, sent):
     return counts, failures
 
 
-def _recheck_rows(ev, parents, levels, roots, check, sent):
+def _recheck_rows(ev, parents, levels, roots, check, sent, kernel="bfs"):
     """Failure map (row index -> failed check names) for re-solved rows
     during recovery — same checks as the first pass."""
     # the first pass runs the spec checks whenever check != "off", so the
     # recheck must too (sent gating stays inside _check_batch)
     return _check_batch(ev, parents, levels, roots, check,
-                        sent if check == "full" else None)[1]
+                        sent if check == "full" else None, kernel=kernel)[1]

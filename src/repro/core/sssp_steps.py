@@ -1,0 +1,530 @@
+"""Delta-stepping SSSP engines (DESIGN.md §16) — the second Graph500 kernel.
+
+Graph500's SSSP benchmark runs single-source shortest paths over the same
+Kronecker graph with uniform edge weights.  The traversal lifecycle is the
+BFS one with three substitutions (the kernel interface of §16):
+
+  * **state carrier** — the packed ``changed`` bitmap replaces the BFS
+    frontier/visited pair, and a ``uint32`` distance plane rides along
+    (``INF_U32`` = unreached); the per-round frontier is *derived*: the
+    changed vertices in the minimum δ-bucket.
+  * **relax rule** — two scatter-min passes per round instead of one:
+    pass A min-relaxes distances (``dist[v] <- min(dist[v],
+    dist[u] + w)`` over frontier out-edges), pass B rebuilds parents as
+    the *minimum source among edges achieving the post-relax distance*.
+    That tie-break makes the final parent a pure function of the final
+    distances — ``parent[v] = min{u : dist[u] + w(u,v) == dist[v]}`` —
+    so it is bitwise-checkable against the host Dijkstra oracle below.
+  * **exchange combine** — distances combine across shards with the
+    min-reduction family (``comms.hierarchical.hierarchical_pmin``, the
+    T3 two-phase monitor shape), while the changed-set *delta* bitmap
+    rides the existing OR family with the §12 density-adaptive codec on
+    the inter-group leg (``hier_or_packed`` wiring; the sieve variant is
+    deliberately NOT used — SSSP vertices re-enter the changed set after
+    being visited, so sieving against "known" bits would drop live
+    work).
+
+Bucket loop (label-correcting δ-stepping): each round pops the entire
+minimum bucket ``b = min(dist // δ)`` over the changed set as the
+frontier, relaxes all its out-edges (light and heavy together — no
+settled/unsettled split), and re-enters every distance-improved vertex.
+Improvements satisfy ``new_dist >= b*δ + 1``, so the bucket index is
+monotone non-decreasing (sentinel s1) and termination follows from
+integer distances decreasing monotonically per vertex.
+
+Parents stay global vertex ids with the BFS sentinel conventions and the
+distance plane is surfaced through the ``BFSResult.level`` slot as int32
+(-1 unreached), so validation, serving, fault recovery, and the
+multiprocess launcher run the SSSP kernel through the exact machinery
+built for BFS.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Module binding, not names: comms.hierarchical imports repro.core for its
+# fault hooks, so pulling names out of it at import time would read a
+# partially initialized module whenever `repro.comms` is imported first.
+from repro.comms import hierarchical as _hier
+from repro.core import faults
+from repro.core.bfs_steps import ChunkedEdgeView
+from repro.core.heavy import padded_bitmap_words, testbit
+from repro.core.hybrid_bfs import (
+    BFSResult,
+    BFSStats,
+    _axis_names_tuple,
+    _exchange_delta,
+    _pack_delta_words,
+    _shard_index,
+)
+from repro.kernels.ref import popcount_u32
+
+#: Exchange wirings of the SSSP kernel: ``hier_min`` is the T3 two-phase
+#: min-reduction for distances + codec'd hierarchical OR for the changed
+#: delta; ``flat`` is the single-phase ablation baseline for both legs.
+SSSP_EXCHANGES = ("hier_min", "flat")
+
+#: Round bound: δ-stepping takes more rounds than BFS takes levels (one
+#: bucket can re-iterate over light-edge chains), so the engine sizes its
+#: stats/bound at least this high regardless of ``plan.max_levels``.
+DEFAULT_MAX_ROUNDS = 512
+
+
+def bucket_width(max_weight: int) -> int:
+    """The δ of δ-stepping, chosen host-side from the max edge weight.
+
+    ``δ = max(1, maxw // 2)`` keeps the bucket count proportional to the
+    weighted diameter in units of the heaviest edge — small enough that
+    bucket scans stay cheap, large enough that light-edge re-iteration
+    within a bucket stays shallow.  Static under jit (a compile-time
+    constant of the plan).
+    """
+    return max(1, int(max_weight) // 2)
+
+
+def sssp_max_rounds(max_levels: int) -> int:
+    """Engine round bound for a plan's ``max_levels`` (never below the
+    δ-stepping default — BFS levels underestimate SSSP rounds)."""
+    return max(int(max_levels), DEFAULT_MAX_ROUNDS)
+
+
+# ---------------------------------------------------------------------------
+# Single-device engine.
+# ---------------------------------------------------------------------------
+
+class _SsspState(NamedTuple):
+    parent_ext: jax.Array   # [V+1] int32 — global parent ids, sentinel V
+    dist: jax.Array         # [V] uint32 — tentative distances, INF_U32 unreached
+    changed_bm: jax.Array   # [W] uint32 — packed changed set (re-entries live)
+    n_changed: jax.Array    # [] int32 — popcount(changed_bm)
+    prev_b: jax.Array       # [] uint32 — last round's bucket (monotonicity s1)
+    rnd: jax.Array          # [] int32 — round counter
+    stats_b: jax.Array      # [max_rounds] int32 — bucket index per round
+    stats_fs: jax.Array     # [max_rounds] int32 — frontier popcount
+    stats_se: jax.Array     # [max_rounds] int32 — frontier degree sum
+    stats_ok: jax.Array     # [max_rounds] int32 — sentinel masks (§13)
+
+
+def _run_sssp_impl(
+    chunks: ChunkedEdgeView,
+    degree: jax.Array,
+    root: jax.Array,
+    *,
+    delta: int,
+    max_rounds: int,
+    fault=None,
+) -> BFSResult:
+    """One δ-stepping SSSP from ``root`` (single device, flat relax).
+
+    SSSP frontiers are thin slices of one δ-bucket, but *which* chunk a
+    bucket touches is weight-dependent, not degree-ordered — so the
+    engine relaxes the flat edge view every round (the chunked layout is
+    reshaped back, exactly like the BFS bottom-up tail).  The heavy core
+    is not consulted: the dense-corner SpMV is a boolean-semiring step
+    with no weight plane.
+    """
+    assert chunks.weight is not None, "SSSP needs a weighted ChunkedEdgeView"
+    v = chunks.num_vertices
+    w = padded_bitmap_words(v)
+    d32 = jnp.uint32(delta)
+    inf = jnp.uint32(_hier.INF_U32)
+    src = chunks.src.reshape(-1)
+    dst = chunks.dst.reshape(-1)
+    valid = chunks.valid.reshape(-1)
+    wgt = chunks.weight.reshape(-1)
+    ids = jnp.arange(v, dtype=jnp.int32)
+
+    parent_ext = jnp.full((v + 1,), v, jnp.int32).at[root].set(root)
+    dist = jnp.full((v,), _hier.INF_U32, jnp.uint32).at[root].set(jnp.uint32(0))
+    root_bit = jnp.uint32(1) << (root % 32).astype(jnp.uint32)
+    changed_bm = jnp.zeros((w,), jnp.uint32).at[root // 32].set(root_bit)
+
+    def cond(s: _SsspState):
+        return (s.n_changed > 0) & (s.rnd < max_rounds)
+
+    def body(s: _SsspState):
+        alive = s.n_changed > 0   # batched-roots guard (vmap over roots)
+
+        # Derive the frontier: changed vertices in the minimum bucket.
+        changed = testbit(s.changed_bm, ids)
+        bkt = jnp.where(changed, s.dist // d32, inf)
+        b = jnp.min(bkt)
+        front = changed & (bkt == b)
+        frontier_bm = _pack_delta_words(front, w)
+        popped_bm = s.changed_bm & ~frontier_bm
+
+        # Pass A: distance min-relax over frontier out-edges.
+        dist_ext = jnp.concatenate(
+            [s.dist, jnp.full((1,), _hier.INF_U32, jnp.uint32)])
+        active = valid & testbit(frontier_bm, jnp.clip(src, 0, v - 1))
+        cand = jnp.where(active, dist_ext[src] + wgt, inf)
+        tgt = jnp.where(active, dst, v)
+        new_dist_ext = dist_ext.at[tgt].min(cand)
+        new_dist = new_dist_ext[:v]
+        improved = new_dist < s.dist
+
+        # Pass B: parent = min source achieving the post-relax distance.
+        # Distance-improved slots reset to the sentinel first; equality
+        # winners min-merge (they never re-enter the changed set — the
+        # fixpoint parent is a pure function of the final distances).
+        pbase = jnp.where(improved, v, s.parent_ext[:v])
+        pext = jnp.concatenate([pbase, jnp.full((1,), v, jnp.int32)])
+        won = active & (cand == new_dist_ext[tgt])
+        new_parent_ext = pext.at[jnp.where(won, dst, v)].min(
+            jnp.where(won, src, v).astype(jnp.int32))
+        if fault is not None and fault.site == "parent":
+            pv = faults.corrupt_parent(
+                fault, new_parent_ext[:v], improved, ids, jnp.int32(v),
+                level=s.rnd, root=root)
+            new_parent_ext = jnp.concatenate([pv, new_parent_ext[v:]])
+
+        new_changed = popped_bm | _pack_delta_words(improved, w)
+        n_changed = jnp.sum(popcount_u32(new_changed)).astype(jnp.int32)
+
+        # In-loop sentinels (§13): bucket monotone, frontier nonempty,
+        # round within bound — a healthy round reads SENTINEL_OK == 7.
+        fs = jnp.sum(popcount_u32(frontier_bm)).astype(jnp.int32)
+        s1 = b >= s.prev_b
+        s2 = fs > 0
+        s3 = s.rnd + 1 <= jnp.int32(max_rounds)
+        ok_mask = (s1.astype(jnp.int32) + 2 * s2.astype(jnp.int32)
+                   + 4 * s3.astype(jnp.int32))
+        scanned = jnp.sum(jnp.where(front, degree, 0)).astype(jnp.int32)
+        b_i32 = jnp.minimum(b, jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+        nxt = _SsspState(
+            new_parent_ext, new_dist, new_changed, n_changed, b,
+            s.rnd + 1,
+            s.stats_b.at[s.rnd].set(b_i32),
+            s.stats_fs.at[s.rnd].set(fs),
+            s.stats_se.at[s.rnd].set(scanned),
+            s.stats_ok.at[s.rnd].set(ok_mask),
+        )
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(alive, new, old), nxt, s)
+
+    init = _SsspState(
+        parent_ext, dist, changed_bm,
+        jnp.int32(1), jnp.uint32(0), jnp.int32(0),
+        jnp.full((max_rounds,), -1, jnp.int32),
+        jnp.zeros((max_rounds,), jnp.int32),
+        jnp.zeros((max_rounds,), jnp.int32),
+        jnp.full((max_rounds,), -1, jnp.int32),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    parent = jnp.where(s.parent_ext[:v] == v, -1, s.parent_ext[:v])
+    dist_i = jnp.where(s.dist == inf, -1, s.dist.astype(jnp.int32))
+    return BFSResult(
+        parent=parent,
+        level=dist_i,   # the distance plane rides the level slot (int32)
+        stats=BFSStats(
+            s.stats_b, s.stats_fs, s.stats_se, s.rnd,
+            jnp.full((max_rounds,), -1, jnp.int32), jnp.int32(0),
+            s.stats_ok,
+        ),
+    )
+
+
+_SSSP_STATICS = ("delta", "max_rounds", "fault")
+
+_run_sssp = functools.partial(
+    jax.jit, static_argnames=_SSSP_STATICS,
+)(_run_sssp_impl)
+
+
+@functools.partial(jax.jit, static_argnames=_SSSP_STATICS)
+def _run_sssp_batch(chunks, degree, roots, *, delta, max_rounds, fault=None):
+    """All search keys under ONE jitted program (vmap over roots)."""
+    return jax.vmap(
+        lambda r: _run_sssp_impl(
+            chunks, degree, r, delta=delta, max_rounds=max_rounds,
+            fault=fault)
+    )(roots)
+
+
+# ---------------------------------------------------------------------------
+# Vertex-sharded engine — runs INSIDE shard_map (the sibling of
+# hybrid_bfs._run_bitmap_sharded, with the kernel interface substitutions).
+#
+# Replication discipline: the distance plane is held FULL-WIDTH and
+# replicated (like the BFS frontier bitmap) — bucket selection is then a
+# pure local computation every round, no extra collective.  Each shard
+# relaxes the edges whose destination it owns, so distance improvements
+# land only in owned slots; one min-reduction reassembles the replicated
+# plane and one OR exchange reassembles the changed-set delta.
+# ---------------------------------------------------------------------------
+
+class _SsspShardState(NamedTuple):
+    parent_loc: jax.Array   # [V_loc+1] int32 — global ids, sentinel V_pad
+    dist_full: jax.Array    # [V_pad] uint32 — replicated distance plane
+    changed_bm: jax.Array   # [W_pad] uint32 — replicated changed set
+    n_changed: jax.Array    # [] int32
+    prev_b: jax.Array       # [] uint32
+    rnd: jax.Array
+    stats_b: jax.Array
+    stats_fs: jax.Array
+    stats_se: jax.Array
+    stats_ok: jax.Array
+
+
+def _run_sssp_sharded(
+    src: jax.Array,        # [n_chunks, chunk_size] int32 — global src ids
+    dst_loc: jax.Array,    # [n_chunks, chunk_size] int32 — owned local slots
+    valid: jax.Array,      # [n_chunks, chunk_size] bool
+    weight: jax.Array,     # [n_chunks, chunk_size] uint32
+    degree_loc: jax.Array, # [V_loc] int32 — degree of owned vertices
+    root: jax.Array,       # [] int32 — global id
+    *,
+    delta: int,
+    max_rounds: int,
+    w_loc: int,
+    n_dev: int,
+    group_axis: str = "group",
+    member_axis: str = "member",
+    exchange: str = "hier_min",
+    partition: str = "block",
+    fault=None,
+) -> BFSResult:
+    """Vertex-sharded δ-stepping SSSP — runs INSIDE ``shard_map``.
+
+    Returns the shard's slice of the result (parent/distance for owned
+    vertices, shard-major — the plan runner restores global vertex
+    order) plus replicated stats; parents and distances are bitwise-
+    identical to the single-device engine for every exchange wiring.
+    """
+    from repro.core.distributed_bfs import owner_local_of
+
+    if exchange not in SSSP_EXCHANGES:
+        raise ValueError(f"unknown SSSP exchange {exchange!r}; expected "
+                         f"one of {SSSP_EXCHANGES}")
+    axes = _axis_names_tuple(group_axis) + _axis_names_tuple(member_axis)
+    v_loc = w_loc * 32
+    v_pad = n_dev * v_loc
+    w_pad = n_dev * w_loc
+    d32 = jnp.uint32(delta)
+    inf = jnp.uint32(_hier.INF_U32)
+    dev = _shard_index(group_axis, member_axis)
+    start = dev * v_loc
+    cyclic = partition == "word_cyclic"
+
+    def to_local(gids):
+        owner, local = owner_local_of(gids, n_dev, w_loc, partition)
+        return owner == dev, local
+
+    def to_global(slots_loc):
+        if cyclic:
+            return (dev + (slots_loc // 32) * n_dev) * 32 + slots_loc % 32
+        return slots_loc + start
+
+    src_flat = src.reshape(-1)
+    dst_flat = dst_loc.reshape(-1)
+    valid_flat = valid.reshape(-1)
+    wgt_flat = weight.reshape(-1)
+    slots = jnp.arange(v_loc, dtype=jnp.int32)
+    gslots = to_global(slots)
+    ids_full = jnp.arange(v_pad, dtype=jnp.int32)
+
+    # The changed-set delta rides the OR exchange family: the two-phase
+    # wiring takes the §12 density-adaptive codec on its inter-group leg
+    # (sparse index lists when the delta is thin — SSSP rounds usually
+    # are).  NEVER the sieve variant: changed-set re-entries would be
+    # wrongly stripped as "already known".
+    delta_wire = "flat" if exchange == "flat" else "hier_or_packed"
+
+    # --- init: root bit set once; owner holds the root parent.
+    is_mine, root_slot = to_local(root)
+    parent_loc = jnp.where((slots == root_slot) & is_mine, root,
+                           jnp.int32(v_pad))
+    parent_loc = jnp.concatenate(
+        [parent_loc, jnp.full((1,), v_pad, jnp.int32)])
+    dist_full = jnp.full((v_pad,), _hier.INF_U32, jnp.uint32).at[root].set(
+        jnp.uint32(0))
+    root_bit = jnp.uint32(1) << (root % 32).astype(jnp.uint32)
+    changed_bm = jnp.zeros((w_pad,), jnp.uint32).at[root // 32].set(root_bit)
+
+    def cond(s: _SsspShardState):
+        return (s.n_changed > 0) & (s.rnd < max_rounds)
+
+    def body(s: _SsspShardState):
+        alive = s.n_changed > 0
+
+        # Bucket selection is replicated work on replicated state — every
+        # shard computes the same frontier with zero communication.
+        changed = testbit(s.changed_bm, ids_full)
+        bkt = jnp.where(changed, s.dist_full // d32, inf)
+        b = jnp.min(bkt)
+        front_full = changed & (bkt == b)
+        frontier_bm = _pack_delta_words(front_full, w_pad)
+        popped_bm = s.changed_bm & ~frontier_bm
+
+        # Pass A over dst-owned edges: frontier membership from the
+        # replicated bitmap, distance scatter-min into owned slots.
+        dist_loc = s.dist_full[gslots]
+        dist_ext = jnp.concatenate(
+            [s.dist_full, jnp.full((1,), _hier.INF_U32, jnp.uint32)])
+        active = valid_flat & testbit(
+            frontier_bm, jnp.clip(src_flat, 0, v_pad - 1))
+        cand = jnp.where(
+            active, dist_ext[jnp.clip(src_flat, 0, v_pad)] + wgt_flat, inf)
+        tgt = jnp.where(active, dst_flat, v_loc)
+        dist_loc_ext = jnp.concatenate(
+            [dist_loc, jnp.full((1,), _hier.INF_U32, jnp.uint32)])
+        new_dist_loc_ext = dist_loc_ext.at[tgt].min(cand)
+        new_dist_loc = new_dist_loc_ext[:v_loc]
+        improved_loc = new_dist_loc < dist_loc
+
+        # Pass B: parent = min source achieving the post-relax distance.
+        pbase = jnp.where(improved_loc, v_pad, s.parent_loc[:v_loc])
+        pext = jnp.concatenate([pbase, jnp.full((1,), v_pad, jnp.int32)])
+        won = active & (cand == new_dist_loc_ext[tgt])
+        new_parent = pext.at[jnp.where(won, dst_flat, v_loc)].min(
+            jnp.where(won, src_flat, v_pad).astype(jnp.int32))
+        if fault is not None and fault.site == "parent":
+            pv = faults.corrupt_parent(
+                fault, new_parent[:v_loc], improved_loc, gslots,
+                jnp.int32(v_pad), level=s.rnd, device=dev, root=root)
+            new_parent = jnp.concatenate([pv, new_parent[v_loc:]])
+
+        # Exchange 1 — distance plane: owner slots carry the new values,
+        # everyone else contributes INF; the min-reduction reassembles
+        # the replicated plane (T3 two-phase under hier_min).
+        contrib = jnp.full((v_pad,), _hier.INF_U32, jnp.uint32).at[gslots].set(
+            new_dist_loc)
+        if exchange == "flat":
+            new_dist_full = _hier._min_all_reduce(
+                contrib, axes, fault=fault, level=s.rnd, device=dev,
+                root=root)
+        else:
+            new_dist_full = _hier.hierarchical_pmin(
+                contrib, group_axis, member_axis, fault=fault, level=s.rnd,
+                device=dev, root=root)
+
+        # Exchange 2 — changed-set delta bitmap (OR family + codec).
+        delta_bm_loc = _pack_delta_words(improved_loc, w_loc)
+        changed_delta_full = _exchange_delta(
+            delta_bm_loc, dev, w_loc, n_dev, exchange=delta_wire,
+            group_axis=group_axis, member_axis=member_axis,
+            partition=partition, known_bm=None,
+            fault=fault, level=s.rnd, root=root)
+        new_changed = popped_bm | changed_delta_full
+        n_changed = jnp.sum(popcount_u32(new_changed)).astype(jnp.int32)
+
+        # In-loop sentinels (§13): exchange conservation (owner deltas
+        # are disjoint, popcounts add), replicated-vs-owned distance
+        # agreement (a dropped min leg desynchronizes the plane), bucket
+        # monotone within the round bound.
+        delta_sum = jax.lax.psum(
+            jnp.sum(popcount_u32(delta_bm_loc)).astype(jnp.int32), axes)
+        got_sum = jnp.sum(popcount_u32(changed_delta_full)).astype(jnp.int32)
+        mism = jax.lax.psum(
+            jnp.sum((new_dist_full[gslots] != new_dist_loc)
+                    .astype(jnp.int32)), axes)
+        s1 = got_sum == delta_sum
+        s2 = mism == 0
+        s3 = (b >= s.prev_b) & (s.rnd + 1 <= jnp.int32(max_rounds))
+        ok_mask = (s1.astype(jnp.int32) + 2 * s2.astype(jnp.int32)
+                   + 4 * s3.astype(jnp.int32))
+
+        fs = jnp.sum(popcount_u32(frontier_bm)).astype(jnp.int32)
+        front_owned = testbit(frontier_bm, gslots)
+        scanned = jax.lax.psum(
+            jnp.sum(jnp.where(front_owned, degree_loc, 0)).astype(jnp.int32),
+            axes)
+        b_i32 = jnp.minimum(b, jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+        nxt = _SsspShardState(
+            new_parent, new_dist_full, new_changed, n_changed, b,
+            s.rnd + 1,
+            s.stats_b.at[s.rnd].set(b_i32),
+            s.stats_fs.at[s.rnd].set(fs),
+            s.stats_se.at[s.rnd].set(scanned),
+            s.stats_ok.at[s.rnd].set(ok_mask),
+        )
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(alive, new, old), nxt, s)
+
+    init = _SsspShardState(
+        parent_loc, dist_full, changed_bm,
+        jnp.int32(1), jnp.uint32(0), jnp.int32(0),
+        jnp.full((max_rounds,), -1, jnp.int32),
+        jnp.zeros((max_rounds,), jnp.int32),
+        jnp.zeros((max_rounds,), jnp.int32),
+        jnp.full((max_rounds,), -1, jnp.int32),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    parent = jnp.where(s.parent_loc[:v_loc] == v_pad, -1,
+                       s.parent_loc[:v_loc])
+    dist_own = s.dist_full[gslots]
+    dist_i = jnp.where(dist_own == inf, -1,
+                       dist_own.astype(jnp.int32))
+    return BFSResult(
+        parent=parent,
+        level=dist_i,
+        stats=BFSStats(
+            s.stats_b, s.stats_fs, s.stats_se, s.rnd,
+            jnp.full((max_rounds,), -1, jnp.int32), jnp.int32(0),
+            s.stats_ok,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host reference oracle — the bitwise ground truth of tests/test_sssp.py.
+# ---------------------------------------------------------------------------
+
+def sssp_oracle(src, dst, valid, weight, num_vertices: int, root: int):
+    """Host Dijkstra + deterministic min-source parents.
+
+    Returns ``(parent, dist)`` int32 numpy arrays matching the engine's
+    output contract exactly: ``dist`` -1 for unreached, ``parent`` -1 for
+    unreached / root's parent is itself; for every reached non-root
+    vertex ``parent[v] = min{u : dist[u] + w(u,v) == dist[v]}`` — the
+    engines' fixpoint parent rule, so equality is bitwise.
+    """
+    import heapq
+
+    import numpy as np
+
+    s = np.asarray(src)
+    d = np.asarray(dst)
+    va = np.asarray(valid)
+    w = np.asarray(weight)
+    s = s[va].astype(np.int64)
+    d = d[va].astype(np.int64)
+    w = w[va].astype(np.int64)
+
+    order = np.argsort(s, kind="stable")
+    s2, d2, w2 = s[order], d[order], w[order]
+    starts = np.searchsorted(s2, np.arange(num_vertices + 1))
+
+    inf = np.iinfo(np.int64).max
+    dist = np.full(num_vertices, inf, np.int64)
+    dist[root] = 0
+    settled = np.zeros(num_vertices, bool)
+    heap = [(0, int(root))]
+    while heap:
+        du, u = heapq.heappop(heap)
+        if settled[u]:
+            continue
+        settled[u] = True
+        for i in range(int(starts[u]), int(starts[u + 1])):
+            vtx = int(d2[i])
+            nd = du + int(w2[i])
+            if nd < dist[vtx]:
+                dist[vtx] = nd
+                heapq.heappush(heap, (nd, vtx))
+
+    reached_src = dist[s] != inf
+    cand = np.where(reached_src, dist[s] + w, inf)
+    wins = (cand == dist[d]) & (dist[d] != inf)
+    parent = np.full(num_vertices, inf, np.int64)
+    np.minimum.at(parent, d[wins], s[wins])
+    parent = np.where(dist == inf, -1,
+                      np.where(parent == inf, -1, parent))
+    parent[root] = root
+    dist_out = np.where(dist == inf, -1, dist).astype(np.int32)
+    return parent.astype(np.int32), dist_out

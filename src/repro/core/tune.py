@@ -460,6 +460,7 @@ def tuned_plan(
     *,
     path: Optional[str] = None,
     overrides: Optional[dict] = None,
+    kernel: Optional[str] = None,
 ) -> Optional[BFSPlan]:
     """Look up the persisted winner for ``(scale, n_devices, backend)``.
 
@@ -467,7 +468,11 @@ def tuned_plan(
     ``None`` when the table is missing or holds no matching entry —
     callers fall back to their own defaults.  ``overrides`` replaces
     explicit plan fields on top of the table entry (explicit always wins
-    over tuned)."""
+    over tuned).  ``kernel`` retargets the winner at another kernel via
+    :func:`repro.core.kernels.rekernel_plan` — committed tables predate
+    the kernel axis, so ``from_dict`` default-fills ``kernel="bfs"`` and
+    the tuned layout/partition carry over with the target kernel's
+    exchange family."""
     doc = load_table(path)
     if doc is None:
         return None
@@ -481,6 +486,9 @@ def tuned_plan(
     plan = BFSPlan.from_dict(entry["plan"])
     if overrides:
         plan = dataclasses.replace(plan, **overrides)
+    if kernel is not None:
+        from repro.core.kernels import rekernel_plan
+        plan = rekernel_plan(plan, kernel)
     return plan
 
 

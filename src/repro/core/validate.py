@@ -8,6 +8,18 @@ Checks (all vectorized, no host loops):
   V4. every graph edge spans levels differing by at most 1.
   V5. both endpoints of every edge are visited iff either is
       (component-consistency: the traversal covered the root's component).
+
+SSSP checks (kernel ``"sssp"``, DESIGN.md §16 — same shape, different
+invariants over ``(parent, dist)`` where ``dist`` rides in the result's
+``level`` plane):
+  S1. parent[root] == root, dist[root] == 0.
+  S2. every reached non-root vertex v satisfies
+      dist[v] == dist[parent[v]] + w(parent[v], v)  (tree distances).
+  S3. every tree edge (v, parent[v]) exists in the input graph.
+  S4. no edge gives a shorter path than claimed:
+      dist[d] <= dist[s] + w(s, d) for every edge with both ends reached
+      (triangle inequality at the fixpoint — distances are optimal).
+  S5. component-consistency, as V5.
 """
 from __future__ import annotations
 
@@ -96,21 +108,112 @@ def validate_batch(ev: EdgeView, parents: jax.Array, levels: jax.Array,
     )(parents, levels, jnp.asarray(roots, jnp.int32))
 
 
-def failure_report(val: Validation):
-    """Host-side attribution of a batched Validation.
+#: Short names of the five SSSP invariants, in SsspValidation field order.
+SSSP_CHECK_NAMES = ("root", "tree_dist", "tree_edge", "no_shorter_edge",
+                    "component")
+
+
+class SsspValidation(NamedTuple):
+    ok: jax.Array          # [] bool
+    root_ok: jax.Array
+    tree_dist_ok: jax.Array
+    tree_edge_ok: jax.Array
+    no_shorter_edge_ok: jax.Array
+    component_ok: jax.Array
+
+
+@jax.jit
+def validate_sssp(ev: EdgeView, result: BFSResult, root: jax.Array
+                  ) -> SsspValidation:
+    """The five SSSP invariants over one ``(parent, dist)`` pair.
+
+    ``result.level`` carries the int32 distance plane (-1 = unreached);
+    ``ev.weight`` must be attached (``with_edge_weights``).  Like the BFS
+    checks, everything is a vectorized whole-graph pass — the tree-edge
+    weight is recovered by the same witness-scatter as V3 (the CSR is
+    deduped, so at most one edge witnesses each (v, parent[v]) pair).
+    """
+    v = ev.num_vertices
+    parent, dist = result.parent, result.level
+    reached = parent >= 0
+    wgt = ev.weight.astype(jnp.int32)
+
+    root_ok = (parent[root] == root) & (dist[root] == 0)
+
+    p_safe = jnp.where(reached, parent, 0)
+    is_root = jnp.arange(v) == root
+
+    # S3 witness scatter, reused for S2: the witnessing edge's weight is
+    # the tree-edge weight w(parent[v], v).
+    p_ext = jnp.concatenate([p_safe, jnp.full((1,), -7, jnp.int32)])
+    witness = ev.valid & (p_ext[ev.src] == ev.dst)
+    has_tree_edge = jax.ops.segment_max(
+        witness.astype(jnp.int32), ev.src, num_segments=v + 1
+    )[:v].astype(bool)
+    w_tree = jax.ops.segment_max(
+        jnp.where(witness, wgt, 0), ev.src, num_segments=v + 1
+    )[:v]
+    tree_edge_ok = jnp.all(jnp.where(reached & ~is_root, has_tree_edge, True))
+
+    tree_dist_ok = jnp.all(
+        jnp.where(
+            reached & ~is_root,
+            (parent >= 0)
+            & (parent < v)
+            & (parent != jnp.arange(v))
+            & (dist[p_safe] >= 0)
+            & (dist == dist[p_safe] + w_tree),
+            True,
+        )
+    )
+
+    # S4: at the fixpoint no edge relaxes further — distances are optimal
+    # (with S2's consistency this is exactly Dijkstra's certificate).
+    dist_ext = jnp.concatenate([dist, jnp.full((1,), -1, jnp.int32)])
+    ds, dd = dist_ext[ev.src], dist_ext[ev.dst]
+    no_shorter_edge_ok = jnp.all(
+        jnp.where(ev.valid & (ds >= 0) & (dd >= 0), dd <= ds + wgt, True)
+    )
+
+    vis_ext = jnp.concatenate([reached, jnp.zeros((1,), bool)])
+    component_ok = jnp.all(
+        jnp.where(ev.valid, vis_ext[ev.src] == vis_ext[ev.dst], True)
+    )
+
+    ok = (root_ok & tree_dist_ok & tree_edge_ok & no_shorter_edge_ok
+          & component_ok)
+    return SsspValidation(ok, root_ok, tree_dist_ok, tree_edge_ok,
+                          no_shorter_edge_ok, component_ok)
+
+
+@jax.jit
+def validate_sssp_batch(ev: EdgeView, parents: jax.Array, levels: jax.Array,
+                        roots: jax.Array) -> SsspValidation:
+    """Batched SSSP validation — SsspValidation leaves come back [R] bool."""
+    return jax.vmap(
+        lambda p, d, r: validate_sssp(ev, BFSResult(parent=p, level=d,
+                                                    stats=None), r)
+    )(parents, levels, jnp.asarray(roots, jnp.int32))
+
+
+def failure_report(val):
+    """Host-side attribution of a batched Validation/SsspValidation.
 
     Returns ``(counts, failures)``: ``counts`` maps every check name to
     the number of roots failing it (zeros included, so the dict shape is
     stable for BENCH metadata), ``failures`` maps each failing root
-    *index* to the list of check names it failed.
+    *index* to the list of check names it failed.  Check names are read
+    off the result type's ``*_ok`` fields, so BFS and SSSP batches both
+    work.
     """
     import numpy as np
 
+    names = tuple(f[:-3] for f in val._fields if f.endswith("_ok"))
     per_check = {name: np.asarray(getattr(val, f"{name}_ok"))
-                 for name in CHECK_NAMES}
+                 for name in names}
     counts = {name: int(np.sum(~okv)) for name, okv in per_check.items()}
     failures: dict[int, list[str]] = {}
     for i in np.nonzero(~np.asarray(val.ok))[0]:
-        failures[int(i)] = [name for name in CHECK_NAMES
+        failures[int(i)] = [name for name in names
                             if not per_check[name][i]]
     return counts, failures

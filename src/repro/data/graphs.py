@@ -1,9 +1,24 @@
-"""Graph datasets for the GNN shape cells (synthetic, Kronecker-powered).
+"""Graph datasets: synthetic families beyond Kronecker, plus GNN cells.
 
 The Graph500 Kronecker generator (repro.core) doubles as the power-law
 graph source for GNN training — the same degree-sort relabeling (T2) is
 applied so heavy vertices are contiguous, which the locality benchmarks
 exploit.
+
+The two non-Kronecker families (DESIGN.md §16) stress the traversal
+kernels from the opposite ends of the diameter spectrum:
+
+  * :func:`grid_graph` — a 2-D grid (road-like): diameter O(side), tiny
+    frontiers, hundreds of δ-stepping buckets — the regime where SSSP
+    and BFS differ most;
+  * :func:`erdos_renyi_graph` — G(n, M) with uniform degree: no heavy
+    tail at all, so the degree-sort/heavy-core machinery gets a graph
+    it cannot help.
+
+Both return the same :class:`~repro.core.kronecker.EdgeList` the
+Kronecker generator emits, so they drop into ``build_csr`` → ``edge_view``
+→ ``compile_plan`` unchanged, and both are deterministic functions of
+``seed`` (numpy ``default_rng``; no global RNG state).
 """
 from __future__ import annotations
 
@@ -15,8 +30,44 @@ import jax.numpy as jnp
 
 from repro.core import generate_edges, build_csr
 from repro.core.graph_build import csr_to_edge_arrays
+from repro.core.kronecker import EdgeList
 from repro.core.reorder import degree_reorder, relabel_edges
 from repro.models.gnn import Graph
+
+
+def grid_graph(side: int, *, seed: int = 0) -> EdgeList:
+    """2-D ``side x side`` grid with 4-neighbor edges (road-like).
+
+    Vertex labels are deterministically permuted by ``seed`` so roots
+    and partitions land anywhere in the lattice (an unpermuted grid
+    would hand the block partition perfectly contiguous rows — too
+    kind a layout to test against).  One directed half-edge per lattice
+    edge; ``build_csr`` symmetrizes.
+    """
+    n = side * side
+    ij = np.arange(n, dtype=np.int64)
+    i, j = ij // side, ij % side
+    right = ij[j < side - 1]
+    down = ij[i < side - 1]
+    src = np.concatenate([right, down])
+    dst = np.concatenate([right + 1, down + side])
+    perm = np.random.default_rng(seed).permutation(n).astype(np.int32)
+    return EdgeList(src=jnp.asarray(perm[src]), dst=jnp.asarray(perm[dst]),
+                    num_vertices=n)
+
+
+def erdos_renyi_graph(n: int, *, avg_degree: int = 8,
+                      seed: int = 0) -> EdgeList:
+    """Erdős–Rényi G(n, M) with ``M = n * avg_degree / 2`` sampled
+    undirected pairs (with replacement; ``build_csr`` dedupes and drops
+    the self loops, so the realized degree is marginally below
+    ``avg_degree``).  Deterministic in ``seed``."""
+    m = (n * avg_degree) // 2
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m, dtype=np.int64)
+    dst = rng.integers(0, n, size=m, dtype=np.int64)
+    return EdgeList(src=jnp.asarray(src, jnp.int32),
+                    dst=jnp.asarray(dst, jnp.int32), num_vertices=n)
 
 
 def make_feature_graph(

@@ -67,13 +67,16 @@ _SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
 #: rung-name suffix per exchange wiring (matches benchmarks/bfs_sharded)
 EXCHANGE_SUFFIX = {"hier_or": "", "hier_or_packed": "_pack",
                    "hier_or_sieve": "_sieve", "hier_gather": "_gather",
-                   "flat": "_flat"}
+                   "hier_min": "_min", "flat": "_flat"}
 
 
-def rung_name(procs: int, dpp: int, exchange: str, partition: str) -> str:
+def rung_name(procs: int, dpp: int, exchange: str, partition: str,
+              kernel: str = "bfs") -> str:
     """Canonical multiprocess rung name: ``mp_<procs>x<dpp>`` plus the
-    exchange/partition suffixes the sharded ladder already uses."""
-    return (f"mp_{procs}x{dpp}" + EXCHANGE_SUFFIX[exchange]
+    exchange/partition suffixes the sharded ladder already uses (and a
+    kernel prefix for non-BFS kernels)."""
+    prefix = "" if kernel == "bfs" else f"{kernel}_"
+    return (prefix + f"mp_{procs}x{dpp}" + EXCHANGE_SUFFIX[exchange]
             + ("_cyc" if partition == "word_cyclic" else ""))
 
 
@@ -295,26 +298,39 @@ def _worker(args) -> int:
     from repro.kernels import ops as kops
 
     fault = parse_inject(args.inject)
+    kernel = args.kernel
     pg, degree, roots, v = _build_inputs(args.scale, args.seed,
                                          args.edge_factor, args.roots)
+    if kernel == "sssp":
+        from repro.core.bfs_steps import with_edge_weights
+
+        pg.ev = with_edge_weights(pg.ev, seed=args.seed)
 
     # In-process single-device oracle: runs on this rank's local device,
     # no mesh.  Every rank computes it (deterministic), every rank
-    # asserts against it — the acceptance bar is bitwise.
-    oracle = compile_plan(BFSPlan(layout=(), batch_roots=True), pg)
-    oracle_parent = np.asarray(oracle.bfs(roots).parent)[:, :v]
-    log("single-device oracle solved")
+    # asserts against it — the acceptance bar is bitwise.  For SSSP the
+    # level plane carries distances, so parity covers both arrays.
+    oracle = compile_plan(
+        BFSPlan(layout=(), batch_roots=True, kernel=kernel), pg)
+    oracle_res = oracle.bfs(roots)
+    oracle_parent = np.asarray(oracle_res.parent)[:, :v]
+    oracle_level = np.asarray(oracle_res.level)[:, :v]
+    log(f"single-device {kernel} oracle solved")
 
     shape = (args.procs, dpp)
     exchanges = [e.strip() for e in args.exchanges.split(",") if e.strip()]
+    if kernel == "sssp":
+        # the generic default wiring maps onto the kernel's min family
+        exchanges = ["hier_min" if e == "hier_or" else e for e in exchanges]
     partitions = [p.strip() for p in args.partitions.split(",") if p.strip()]
     rungs: dict = {}
     all_identical = True
     for partition in partitions:
         for exchange in exchanges:
-            name = rung_name(args.procs, dpp, exchange, partition)
+            name = rung_name(args.procs, dpp, exchange, partition, kernel)
             plan = BFSPlan(layout=("group", "member"), mesh_shape=shape,
-                           exchange=exchange, partition=partition)
+                           exchange=exchange, partition=partition,
+                           kernel=kernel)
             compiled = compile_plan(plan, pg, fault=fault)
             assert mesh_process_count(compiled.mesh) == args.procs, \
                 "mesh does not span the worker processes"
@@ -322,28 +338,35 @@ def _worker(args) -> int:
                                   retries=args.retries,
                                   fallback=args.fallback)
             run = result.run
-            identical = bool(np.array_equal(result.parent[:, :v],
-                                            oracle_parent))
+            identical = bool(
+                np.array_equal(result.parent[:, :v], oracle_parent)
+                and (kernel != "sssp"
+                     or np.array_equal(result.level[:, :v], oracle_level)))
             all_identical &= identical
             if fault is None and not identical:
                 raise AssertionError(
-                    f"{name}: parents diverge from the single-device "
+                    f"{name}: results diverge from the single-device "
                     f"oracle across the process boundary — parity "
                     f"regression (procs={args.procs} x {dpp} devices)")
             if fault is not None and not run.check_counts:
                 raise AssertionError(
                     f"{name}: fault injected but no check ran — use "
                     f"--check post|full")
-            wire = modeled_wire_bytes(
-                result.level[0], n_devices=total,
-                w_loc=compiled.graph.sharded.w_loc,
-                group=args.procs, member=dpp, partition=partition)
+            # The §12 byte model and the exchange-leg replay reconstruct
+            # per-level BFS deltas from the level array; SSSP rounds pop
+            # δ-buckets, not levels, so neither applies to that kernel.
+            wire = (modeled_wire_bytes(
+                        result.level[0], n_devices=total,
+                        w_loc=compiled.graph.sharded.w_loc,
+                        group=args.procs, member=dpp, partition=partition)
+                    if kernel == "bfs" else None)
             exch_s = (time_exchange_per_level(compiled, result.level[0],
                                               reps=args.reps)
-                      if fault is None else None)
+                      if fault is None and kernel == "bfs" else None)
             rungs[name] = {
                 "mesh": f"{args.procs}x{dpp}",
                 "layer": "multiprocess",
+                "kernel": kernel,
                 "procs": args.procs,
                 "devices_per_proc": dpp,
                 "plan": plan.to_dict(),
@@ -368,6 +391,7 @@ def _worker(args) -> int:
     payload = {
         "procs": args.procs,
         "devices_per_proc": dpp,
+        "kernel": kernel,
         "scale": args.scale,
         "seed": args.seed,
         "n_roots": len(roots),
@@ -420,7 +444,7 @@ def launch(procs: int, devices_per_proc: int, *, scale: int = 12,
            check: str = "post", retries: int = 0, fallback: bool = False,
            inject: Optional[str] = None, reps: int = 3,
            log_dir: Optional[str] = None,
-           timeout_s: float = 1800.0) -> dict:
+           timeout_s: float = 1800.0, kernel: str = "bfs") -> dict:
     """Spawn the worker gang, wait, and return rank 0's JSON payload.
 
     One log file and one pid file per rank land in ``log_dir`` (a fresh
@@ -443,6 +467,7 @@ def launch(procs: int, devices_per_proc: int, *, scale: int = 12,
         "--seed", str(seed), "--edge-factor", str(edge_factor),
         "--exchanges", exchanges, "--partitions", partitions,
         "--check", check, "--retries", str(retries), "--reps", str(reps),
+        "--kernel", kernel,
     ]
     if fallback:
         common.append("--fallback")
@@ -518,12 +543,16 @@ def run_config(cfg, built=None):
 
     built = built or pipeline.build(cfg)
     dpp = cfg.devices_per_proc or 1
+    exchange = cfg.exchange
+    if cfg.kernel == "sssp" and exchange == "hier_or":
+        exchange = "hier_min"   # the kernel's default wiring (§16)
     payload = launch(
         cfg.procs, dpp, scale=cfg.scale, n_roots=cfg.n_roots,
         seed=cfg.seed, edge_factor=cfg.edge_factor,
-        exchanges=cfg.exchange, partitions=cfg.partition,
-        check=cfg.check, retries=cfg.retries, fallback=cfg.fallback)
-    name = rung_name(cfg.procs, dpp, cfg.exchange, cfg.partition)
+        exchanges=exchange, partitions=cfg.partition,
+        check=cfg.check, retries=cfg.retries, fallback=cfg.fallback,
+        kernel=cfg.kernel)
+    name = rung_name(cfg.procs, dpp, exchange, cfg.partition, cfg.kernel)
     return built, _deserialize_run(payload["rungs"][name]["g500"])
 
 
@@ -536,6 +565,8 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--roots", type=int, default=8)
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--edge-factor", type=int, default=16)
+    ap.add_argument("--kernel", default="bfs", choices=("bfs", "sssp"),
+                    help="traversal kernel (DESIGN.md §16)")
     ap.add_argument("--exchanges", default="hier_or",
                     help="comma list of exchange wirings to run")
     ap.add_argument("--partitions", default="block",
@@ -568,16 +599,18 @@ def main(argv: Optional[list] = None) -> int:
         exchanges=args.exchanges, partitions=args.partitions,
         check=args.check, retries=args.retries, fallback=args.fallback,
         inject=args.inject, reps=args.reps, log_dir=args.log_dir,
-        timeout_s=args.timeout)
+        timeout_s=args.timeout, kernel=args.kernel)
     for name, rung in payload["rungs"].items():
         exch = rung.get("exchange_seconds")
         extra = (f"exchange_total={exch['total_seconds']:.4f}s "
                  f"levels={exch['levels']}" if exch
                  else f"check_counts={rung['check_counts']}")
+        wire = rung.get("wire_bytes")
+        raw = (f"inter_raw={wire['totals']['inter_raw']}B "
+               if wire else "")
         print(f"# {name}: identical={rung['identical']} "
               f"hmean_TEPS={rung['harmonic_mean_teps']:.3g} "
-              f"inter_raw={rung['wire_bytes']['totals']['inter_raw']}B "
-              f"{extra}", file=sys.stderr)
+              f"{raw}{extra}", file=sys.stderr)
     print(_MARK + json.dumps(payload), flush=True)
     if args.inject is None and not payload["parents_bitwise_identical"]:
         print("# FAIL: parents not bitwise-identical to the oracle",

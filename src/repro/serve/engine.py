@@ -1,4 +1,9 @@
-"""The persistent BFS serving engine (DESIGN.md §14).
+"""The persistent traversal serving engine (DESIGN.md §14).
+
+Kernel-generic (§16): the engine serves whichever Graph500 kernel its
+plan names — BFS parent trees or SSSP parent/distance pairs (the
+distance plane rides the ``level`` rows) — through the same coalescer,
+hot-root cache, and checked-batch requeue machinery.
 
 ``Engine`` is the product-shaped wrapper around the whole existing
 stack: it loads a graph ONCE, resolves a :class:`~repro.core.plan.BFSPlan`
@@ -92,13 +97,21 @@ class Engine:
                  config: Optional[ServeConfig] = None,
                  scale: Optional[int] = None,
                  plan_overrides: Optional[dict] = None,
-                 mesh=None, fault=None):
+                 mesh=None, fault=None, kernel: Optional[str] = None):
         self.config = config or ServeConfig()
         if plan is None:
             plan = resolve_serve_plan(scale, plan_overrides,
                                       batch_size=self.config.batch_size)
         elif not plan.batch_roots:
             plan = dataclasses.replace(plan, batch_roots=True)
+        if kernel is not None:
+            # Kernel-generic serving (DESIGN.md §16): the coalescer /
+            # cache / requeue machinery is per-engine instance, so one
+            # Engine serves one kernel; re-kerneling resets an exchange
+            # the target kernel cannot wire.
+            from repro.core.kernels import rekernel_plan
+
+            plan = rekernel_plan(plan, kernel)
         self.plan = plan
         self.compiled = compile_plan(plan, built, mesh=mesh, fault=fault)
         self.cache = ParentCache(self.config.cache_capacity)

@@ -218,3 +218,75 @@ def test_serve_rung_default_fills_plan_like_teps_rungs():
     cur = collect_rungs(_serve_doc(new_plan, p99=1.1), only_fresh=True)
     regressions, matched, unmatched = compare(base, cur, 0.25, 0.5)
     assert len(matched) == 1 and not unmatched and not regressions
+
+
+def _sssp_doc(plan_dict, teps=1000.0):
+    return {
+        "interpret_mode": True,
+        "modules_from_this_run": ["sssp"],
+        "modules": {
+            "sssp": {
+                "latest_scale": 12,
+                "by_scale": {
+                    "12": {
+                        "interpret_mode": True,
+                        "rungs_from_this_run": ["2x2_min"],
+                        "rungs": {
+                            "2x2_min": {
+                                "plan": plan_dict,
+                                "harmonic_mean_teps": teps,
+                            },
+                        },
+                    },
+                },
+            },
+        },
+    }
+
+
+def test_pre_kernel_baseline_default_fills_and_gates():
+    """Satellite (§16): a committed baseline recorded before the
+    ``kernel`` plan field existed still matches a current BFS rung that
+    carries ``kernel="bfs"`` — adding the kernel axis must not
+    zero-match every committed BFS baseline."""
+    old_plan = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2)).to_dict()
+    assert old_plan["kernel"] == "bfs"
+    old_plan.pop("kernel")             # pre-§16 baseline shape
+    new_plan = BFSPlan(layout=("group", "member"), mesh_shape=(4, 2)).to_dict()
+    base = collect_rungs(_doc(old_plan, teps=1000.0))
+    cur = collect_rungs(_doc(new_plan, teps=990.0), only_fresh=True)
+    regressions, matched, unmatched = compare(base, cur, 0.25)
+    assert len(matched) == 1 and not unmatched and not regressions
+
+
+def test_sssp_rungs_collect_and_gate_separately():
+    """Satellite (§16): sssp-module rungs flatten under their own
+    ``sssp/`` names and gate against sssp baselines only — on first run
+    they report unmatched (not gated), and a kernel flip on an
+    identically-named rung is a plan change, never a match."""
+    sssp_plan = BFSPlan(layout=("group", "member"), mesh_shape=(2, 2),
+                        exchange="hier_min", kernel="sssp").to_dict()
+    cur = collect_rungs(_sssp_doc(sssp_plan, teps=500.0), only_fresh=True)
+    assert set(cur) == {"sssp/scale12/2x2_min"}
+
+    # first run: no sssp baseline -> unmatched, vacuity-neutral
+    bfs_base = collect_rungs(_doc(BFSPlan(
+        layout=("group", "member"), mesh_shape=(4, 2)).to_dict()))
+    regressions, matched, unmatched = compare(bfs_base, cur, 0.25)
+    assert not regressions and not matched
+    assert unmatched == [("sssp/scale12/2x2_min", "missing from baseline")]
+
+    # committed sssp baseline -> gates normally
+    base = collect_rungs(_sssp_doc(sssp_plan, teps=500.0))
+    regressions, matched, _ = compare(base, cur, 0.25)
+    assert len(matched) == 1 and not regressions
+    slow = collect_rungs(_sssp_doc(sssp_plan, teps=100.0), only_fresh=True)
+    regressions, _, _ = compare(base, slow, 0.25)
+    assert len(regressions) == 1
+
+    # a kernel flip under the same rung name must not match
+    bfs_named = dict(sssp_plan, kernel="bfs", exchange="hier_or")
+    flipped = collect_rungs(_sssp_doc(bfs_named, teps=500.0), only_fresh=True)
+    regressions, matched, unmatched = compare(base, flipped, 0.25)
+    assert not matched and not regressions
+    assert unmatched == [("sssp/scale12/2x2_min", "plan dict changed")]

@@ -1,0 +1,324 @@
+"""SSSP kernel tests (DESIGN.md §16): δ-stepping as the second kernel.
+
+The contract is bitwise: every engine path — single-device (batch and
+per-root), vertex-sharded under both partitions and both min-family
+exchanges, the composed 3-axis layout, and the 2-process launcher gang —
+must produce parents AND distances exactly equal to the host Dijkstra +
+min-source-parent oracle (:func:`repro.core.sssp_steps.sssp_oracle`).
+Multi-device cases run in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps seeing 1 device.
+
+The fault leg reuses the §13 machinery unchanged: an exchange fault on
+the sharded distance min-combine must be *detected* by ``check="full"``
+(distance corruption attributed to the SSSP check names) and *recovered*
+bitwise by the degraded single-device fallback; a parent fault that
+survives the fallback must quarantine.
+
+The non-Kronecker families (``repro.data.graphs``) ride here: the 2-D
+grid is the high-diameter, many-bucket regime Kronecker never produces.
+"""
+import os
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PreparedGraph, TraversalPlan, build_csr, chunk_edge_view, compile_plan,
+    edge_view, generate_edges, sssp_oracle, with_edge_weights,
+)
+from repro.core.reorder import degree_reorder, relabel_edges
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+from repro.util import respawn_with_host_devices  # noqa: E402
+
+SCALE = 8
+ROOTS = 4
+
+
+def run_sub(code: str) -> str:
+    out = respawn_with_host_devices(
+        [sys.executable, "-c", textwrap.dedent(code)], 8,
+        pythonpath=(REPO_SRC,), capture=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def weighted_graph(scale=SCALE, seed=3, wseed=1):
+    edges = generate_edges(seed, scale)
+    g0 = build_csr(edges)
+    r = degree_reorder(g0.degree)
+    g = build_csr(relabel_edges(edges, r))
+    ev = with_edge_weights(edge_view(g), seed=wseed)
+    return g, ev
+
+
+def oracle_planes(g, ev, roots):
+    V = g.num_vertices
+    par = np.empty((len(roots), V), np.int32)
+    dist = np.empty((len(roots), V), np.int32)
+    for i, root in enumerate(roots):
+        p, d = sssp_oracle(ev.src, ev.dst, ev.valid, ev.weight, V, int(root))
+        par[i], dist[i] = p, d
+    return par, dist
+
+
+def assert_oracle_parity(res, g, o_par, o_dist, what=""):
+    V = g.num_vertices
+    assert np.array_equal(np.asarray(res.parent)[:, :V], o_par), what
+    assert np.array_equal(np.asarray(res.level)[:, :V], o_dist), what
+
+
+# ---------------------------------------------------------------------------
+# Single device: batch + per-root, Kronecker + both synthetic families
+# ---------------------------------------------------------------------------
+
+def test_single_device_batch_and_per_root_match_oracle():
+    g, ev = weighted_graph()
+    pg = PreparedGraph(ev=ev, degree=g.degree, core=None,
+                       chunks=chunk_edge_view(ev))
+    roots = np.arange(ROOTS, dtype=np.int32)
+    o_par, o_dist = oracle_planes(g, ev, roots)
+    batch = compile_plan(TraversalPlan(layout=(), batch_roots=True,
+                                       kernel="sssp"), pg).bfs(roots)
+    assert_oracle_parity(batch, g, o_par, o_dist, "batch")
+    single = compile_plan(TraversalPlan(layout=(), batch_roots=False,
+                                        kernel="sssp"), pg)
+    for i, root in enumerate(roots):
+        res = single.bfs(int(root))
+        assert np.array_equal(np.asarray(res.parent)[:g.num_vertices],
+                              o_par[i])
+        assert np.array_equal(np.asarray(res.level)[:g.num_vertices],
+                              o_dist[i])
+
+
+@pytest.mark.parametrize("family", ["grid", "erdos_renyi"])
+def test_synthetic_families_match_oracle(family):
+    """The non-Kronecker families (§16): the 2-D grid drives the bucket
+    count past anything small-world — the engine's round bound and the
+    oracle must still agree bitwise."""
+    from repro.data.graphs import erdos_renyi_graph, grid_graph
+
+    el = (grid_graph(20, seed=5) if family == "grid"
+          else erdos_renyi_graph(400, avg_degree=6, seed=7))
+    g = build_csr(el)
+    ev = with_edge_weights(edge_view(g), seed=2)
+    pg = PreparedGraph(ev=ev, degree=g.degree, core=None,
+                       chunks=chunk_edge_view(ev))
+    roots = np.array([0, 3, 11], np.int32)
+    o_par, o_dist = oracle_planes(g, ev, roots)
+    res = compile_plan(TraversalPlan(layout=(), batch_roots=True,
+                                     kernel="sssp"), pg).bfs(roots)
+    assert_oracle_parity(res, g, o_par, o_dist, family)
+    if family == "grid":
+        # the grid's diameter must show up as a many-round traversal
+        single = compile_plan(TraversalPlan(layout=(), batch_roots=False,
+                                            kernel="sssp"), pg).bfs(0)
+        assert int(single.stats.levels) > 20
+
+
+def test_families_are_deterministic_in_seed():
+    from repro.data.graphs import erdos_renyi_graph, grid_graph
+
+    a, b = grid_graph(8, seed=3), grid_graph(8, seed=3)
+    assert np.array_equal(np.asarray(a.src), np.asarray(b.src))
+    assert np.array_equal(np.asarray(a.dst), np.asarray(b.dst))
+    c = grid_graph(8, seed=4)
+    assert not np.array_equal(np.asarray(a.src), np.asarray(c.src))
+    e1, e2 = (erdos_renyi_graph(100, seed=9) for _ in range(2))
+    assert np.array_equal(np.asarray(e1.src), np.asarray(e2.src))
+
+
+# ---------------------------------------------------------------------------
+# Plan layer: the kernel axis
+# ---------------------------------------------------------------------------
+
+def test_plan_kernel_axis_validation_and_shims():
+    from repro.core.kernels import rekernel_plan
+    from repro.core.plan import validate_plan
+
+    with pytest.raises(ValueError, match="unknown kernel"):
+        validate_plan(TraversalPlan(kernel="apsp"))
+    with pytest.raises(ValueError, match="unknown engine"):
+        validate_plan(TraversalPlan(engine="reference", kernel="sssp"))
+    with pytest.raises(ValueError, match="unknown exchange"):
+        validate_plan(TraversalPlan(layout=("group", "member"),
+                                    exchange="hier_or_sieve", kernel="sssp"))
+    # the generic default exchange normalizes to the kernel's family
+    p = TraversalPlan(layout=("group", "member"), kernel="sssp")
+    assert p.exchange == "hier_min"
+    # pre-§16 plan dicts (no kernel key) load as BFS
+    d = TraversalPlan(layout=(), batch_roots=True).to_dict()
+    del d["kernel"]
+    assert TraversalPlan.from_dict(d).kernel == "bfs"
+    # re-kerneling keeps the layout but swaps an alien exchange family
+    tuned = TraversalPlan(layout=("group", "member"), mesh_shape=(2, 2),
+                          exchange="hier_or_packed", partition="word_cyclic")
+    rp = rekernel_plan(tuned, "sssp")
+    assert (rp.kernel, rp.exchange, rp.partition) == \
+        ("sssp", "hier_min", "word_cyclic")
+    assert rekernel_plan(rp, "sssp") is rp
+
+
+def test_sssp_requires_weight_plane():
+    g, _ = weighted_graph()
+    ev = edge_view(g)  # no weights attached
+    pg = PreparedGraph(ev=ev, degree=g.degree, core=None)
+    with pytest.raises(ValueError, match="weight"):
+        compile_plan(TraversalPlan(layout=(), batch_roots=True,
+                                   kernel="sssp"), pg)
+
+
+# ---------------------------------------------------------------------------
+# Sharded mesh matrix + composed layout (subprocess, 8 host devices)
+# ---------------------------------------------------------------------------
+
+MESH_MATRIX = f"""
+import numpy as np
+from repro.core import (TraversalPlan, PreparedGraph, build_csr, compile_plan,
+                        edge_view, generate_edges, sssp_oracle,
+                        with_edge_weights)
+from repro.core.reorder import degree_reorder, relabel_edges
+
+edges = generate_edges(3, {SCALE})
+g0 = build_csr(edges)
+r = degree_reorder(g0.degree)
+g = build_csr(relabel_edges(edges, r))
+ev = with_edge_weights(edge_view(g), seed=1)
+pg = PreparedGraph(ev=ev, degree=g.degree, core=None)
+roots = np.arange({ROOTS}, dtype=np.int32)
+V = g.num_vertices
+o_par = np.empty((len(roots), V), np.int32)
+o_dist = np.empty((len(roots), V), np.int32)
+for i, root in enumerate(roots):
+    o_par[i], o_dist[i] = sssp_oracle(ev.src, ev.dst, ev.valid, ev.weight,
+                                      V, int(root))
+
+cases = [(shape, part, exch)
+         for shape in ((2, 2), (4, 2))
+         for part in ("block", "word_cyclic")
+         for exch in ("hier_min", "flat")]
+n_ok = 0
+for shape, part, exch in cases:
+    plan = TraversalPlan(layout=("group", "member"), mesh_shape=shape,
+                         exchange=exch, partition=part, batch_roots=True,
+                         kernel="sssp")
+    res = compile_plan(plan, pg).run(roots, check="full")
+    run = res.run
+    assert run.all_valid, (shape, part, exch, run.check_failures)
+    assert all(v == 0 for v in run.check_counts.values()), \\
+        (shape, part, exch, run.check_counts)
+    assert np.array_equal(np.asarray(res.parent)[:, :V], o_par), \\
+        (shape, part, exch)
+    assert np.array_equal(np.asarray(res.level)[:, :V], o_dist), \\
+        (shape, part, exch)
+    n_ok += 1
+
+# composed 3-axis layout: root batch over its own mesh axis outside the
+# vertex-sharded SPMD program
+plan = TraversalPlan(layout=("root", "group", "member"),
+                     mesh_shape=(2, 2, 2), batch_roots=True, kernel="sssp")
+res = compile_plan(plan, pg).bfs(roots)
+assert np.array_equal(np.asarray(res.parent)[:, :V], o_par)
+assert np.array_equal(np.asarray(res.level)[:, :V], o_dist)
+n_ok += 1
+print(f"MESH_OK n={{n_ok}}")
+"""
+
+
+def test_sharded_mesh_matrix_matches_oracle():
+    """2x2 / 4x2 x block / word_cyclic x hier_min / flat, check="full"
+    with zero failure counts, plus the composed (2,2,2) layout — all
+    bitwise-equal to the host oracle."""
+    out = run_sub(MESH_MATRIX)
+    assert "MESH_OK n=9" in out
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: distance corruption detected + recovered (§13)
+# ---------------------------------------------------------------------------
+
+FAULTS = f"""
+import numpy as np
+from repro.core import (TraversalPlan, PreparedGraph, build_csr, compile_plan,
+                        edge_view, generate_edges, with_edge_weights)
+from repro.core.faults import FaultSpec
+from repro.core.reorder import degree_reorder, relabel_edges
+
+edges = generate_edges(11, 9)
+g0 = build_csr(edges)
+r = degree_reorder(g0.degree)
+g = build_csr(relabel_edges(edges, r))
+ev = with_edge_weights(edge_view(g), seed=1)
+pg = PreparedGraph(ev=ev, degree=g.degree, core=None)
+roots = np.arange(4, dtype=np.int32)
+plan = TraversalPlan(layout=("group", "member"), mesh_shape=(2, 2),
+                     batch_roots=True, kernel="sssp")
+base = compile_plan(TraversalPlan(layout=(), batch_roots=True,
+                                  kernel="sssp"), pg).run(roots, check="post")
+assert base.run.all_valid
+
+# Zeroing the distance min-exchange corrupts every replica's dist plane;
+# check="full" must catch it (attributed to the SSSP invariants + the
+# in-loop sentinel) and the single-device fallback — which has no
+# exchange — must recover the exact oracle bits.
+f = FaultSpec(site="exchange", kind="zero", level=1, persistent=True)
+res = compile_plan(plan, pg, fault=f).run(roots, check="full", retries=1,
+                                          fallback=True)
+run = res.run
+assert run.check_counts["tree_dist"] == 4
+assert run.check_counts["no_shorter_edge"] == 4
+assert run.check_counts["sentinel"] == 4
+assert run.retries == 4 and run.fallbacks == 4
+assert run.quarantined == [] and run.all_valid
+assert np.array_equal(res.parent, base.parent)
+assert np.array_equal(res.level, base.level)
+print("SSSP_RECOVERED")
+
+# A parent fault on the degraded shape itself survives the fallback ->
+# quarantine, never a silently wrong tree.
+f2 = FaultSpec(site="parent", kind="offset", level=1, persistent=True)
+c2 = compile_plan(TraversalPlan(layout=(), batch_roots=True, kernel="sssp"),
+                  pg, fault=f2)
+run2 = c2.run(roots, check="post", retries=1, fallback=True).run
+assert run2.check_counts["tree_dist"] == 4
+assert run2.quarantined == [0, 1, 2, 3]
+assert run2.harmonic_mean_teps == 0.0
+print("SSSP_QUARANTINED")
+"""
+
+
+def test_sssp_fault_detected_and_recovered():
+    out = run_sub(FAULTS)
+    assert "SSSP_RECOVERED" in out and "SSSP_QUARANTINED" in out
+
+
+# ---------------------------------------------------------------------------
+# Multiprocess: 2 real processes, distance plane crosses the wire
+# ---------------------------------------------------------------------------
+
+def test_two_proc_sssp_parity(tmp_path):
+    """One 2-proc x 2-device gang under the sssp kernel: parents AND
+    distances bitwise-identical to the in-worker host oracle on both
+    min-family exchanges."""
+    from repro.launch.multiprocess import launch, rung_name
+
+    payload = launch(2, 2, scale=SCALE, n_roots=ROOTS, seed=3, reps=1,
+                     exchanges="hier_min,flat", partitions="block",
+                     check="full", kernel="sssp",
+                     log_dir=str(tmp_path / "logs"))
+    assert payload["kernel"] == "sssp"
+    assert payload["parents_bitwise_identical"] is True
+    expected = {rung_name(2, 2, e, "block", "sssp")
+                for e in ("hier_min", "flat")}
+    assert set(payload["rungs"]) == expected
+    for name, rung in payload["rungs"].items():
+        assert rung["identical"] is True, name
+        assert rung["validated"] is True, name
+        assert all(v == 0 for v in rung["check_counts"].values()), name
+        # BFS-level wire reconstruction does not apply to δ-rounds
+        assert rung["wire_bytes"] is None
+        assert rung["exchange_seconds"] is None
